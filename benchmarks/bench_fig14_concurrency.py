@@ -1,0 +1,49 @@
+"""Fig. 14: concurrent requests — TTFT and energy/request as edge compute
+is shared (device utilization rises); SparKV sheds compute-path work to
+streaming when the device is contended."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import SparKVConfig, get_config
+from repro.core import baselines as B
+from repro.core.costs import NETWORKS
+from repro.data.workloads import DATASETS, synthesize
+
+from benchmarks.common import save, table
+
+
+def run(quick: bool = False):
+    cfg = get_config("sparkv-qwen3-4b")
+    spcfg = SparKVConfig()
+    wl = synthesize(cfg, 12_288, DATASETS["longchat"])
+    net = NETWORKS["campus-wifi"]
+    rows = []
+    levels = [0.0, 0.3, 0.6, 0.8]
+    for util in levels[:2] if quick else levels:
+        agg = {}
+        for pol in ["sparkv", "strong_hybrid", "local_prefill"]:
+            r = B.PIPELINES[pol](cfg, wl, "jetson-orin", net, spcfg,
+                                 util=util, seed=0)
+            agg[pol] = r
+        rows.append({
+            "concurrency_util": util,
+            "sparkv_ttft": agg["sparkv"].ttft_s,
+            "hybrid_ttft": agg["strong_hybrid"].ttft_s,
+            "local_ttft": agg["local_prefill"].ttft_s,
+            "sparkv_J": agg["sparkv"].energy_j,
+            "hybrid_J": agg["strong_hybrid"].energy_j,
+            "local_J": agg["local_prefill"].energy_j,
+            "vs_hybrid_x": agg["strong_hybrid"].ttft_s
+            / agg["sparkv"].ttft_s,
+            "vs_local_x": agg["local_prefill"].ttft_s
+            / agg["sparkv"].ttft_s,
+        })
+    print(table(rows, list(rows[0].keys()),
+                title="\n[Fig 14] concurrent-request contention"))
+    save("fig14_concurrency", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""§Roofline table: joins the production dry-run (memory_analysis, compile
+proof, HLO-text collectives) with the depth-extrapolated cost calibration
+(launch.calibrate) and prints per-(arch x shape) roofline terms.
+
+    compute_s    = flops_per_dev / 197e12        (bf16 peak, v5e)
+    memory_s     = bytes_per_dev / 819e9
+    collective_s = wire_bytes_per_dev / 50e9     (ring-modeled)
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode) and
+the useful-compute ratio MODEL_FLOPS / (HLO_flops x chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.distributed.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                        roofline_terms)
+
+from benchmarks.common import save, table
+
+DRYRUN_DIR = "results/dryrun"
+CALIB_DIR = "results/calibration"
+
+
+def load_cells(mesh_tag: str = "pod16x16"):
+    rows = []
+    for path in sorted(glob.glob(f"{DRYRUN_DIR}/{mesh_tag}/*.json")):
+        dr = json.load(open(path))
+        if dr["status"] == "SKIP":
+            rows.append({"arch": dr["arch"], "shape": dr["shape"],
+                         "status": "SKIP", "note": dr["reason"][:40]})
+            continue
+        if dr["status"] != "OK":
+            rows.append({"arch": dr["arch"], "shape": dr["shape"],
+                         "status": dr["status"]})
+            continue
+        cpath = path.replace(DRYRUN_DIR, CALIB_DIR)
+        cal = json.load(open(cpath)) if os.path.exists(cpath) else None
+        chips = dr["chips"]
+        if cal and cal.get("status") == "OK":
+            flops, wire = cal["flops"], cal["coll_wire"]
+            src = "calibrated"
+        else:
+            flops = dr["cost"]["flops_per_dev"]
+            wire = dr["collectives"]["wire_bytes"]
+            src = "hlo(scan-undercounted)"
+        # memory term: analytic HBM-traffic model (HLO bytes-accessed is
+        # not HBM traffic — see distributed/analytic.py docstring)
+        from repro.configs import SHAPES, get_config
+        from repro.distributed.analytic import analytic_bytes
+        byts = analytic_bytes(get_config(dr["arch"]), SHAPES[dr["shape"]],
+                              chips)["bytes_per_dev"]
+        compute_s = flops / PEAK_FLOPS
+        memory_s = byts / HBM_BW
+        coll_s = wire / LINK_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dom = max(terms, key=terms.get)
+        bound = terms[dom]
+        mf = dr["model_flops"]
+        rows.append({
+            "arch": dr["arch"], "shape": dr["shape"], "status": "OK",
+            "mem_GiB": dr["memory"]["peak_est_bytes"] / 2**30,
+            "compute_ms": compute_s * 1e3,
+            "memory_ms": memory_s * 1e3,
+            "collective_ms": coll_s * 1e3,
+            "dominant": dom,
+            "bound_ms": bound * 1e3,
+            "roofline_frac": compute_s / bound if bound else 0.0,
+            "useful_ratio": mf / (flops * chips) if flops else 0.0,
+            "src": src,
+        })
+    return rows
+
+
+def run(quick: bool = False, mesh_tag: str = "pod16x16"):
+    rows = load_cells(mesh_tag)
+    cols = ["arch", "shape", "status", "mem_GiB", "compute_ms",
+            "memory_ms", "collective_ms", "dominant", "roofline_frac",
+            "useful_ratio", "src"]
+    print(table([r for r in rows],
+                cols, title=f"\n[Roofline] per-cell terms ({mesh_tag}, "
+                            f"v5e: 197TF/s, 819GB/s HBM, 50GB/s link)"))
+    save(f"roofline_{mesh_tag}", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: result recording + table printing."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+
+def save(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    payload = dict(payload, _bench=name, _time=time.time())
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return path
+
+
+def table(rows: list[dict], cols: list[str], *, title: str = "",
+          fmt: dict | None = None) -> str:
+    fmt = fmt or {}
+    widths = {c: max(len(c), *(len(_cell(r.get(c), fmt.get(c)))
+                               for r in rows)) for c in cols}
+    out = []
+    if title:
+        out.append(title)
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    out.append("  ".join("-" * widths[c] for c in cols))
+    for r in rows:
+        out.append("  ".join(
+            _cell(r.get(c), fmt.get(c)).ljust(widths[c]) for c in cols))
+    return "\n".join(out)
+
+
+def _cell(v, f) -> str:
+    if v is None:
+        return "-"
+    if f:
+        return format(v, f)
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)

@@ -1,0 +1,59 @@
+"""Benchmark harness driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,fig13]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+BENCHES = [
+    ("table1", "benchmarks.bench_table1_stream_vs_compute"),
+    ("table2", "benchmarks.bench_table2_greedy_vs_milp"),
+    ("fig3", "benchmarks.bench_fig3_chunk_latency"),
+    ("fig4", "benchmarks.bench_fig4_entropy_codesize"),
+    ("fig8", "benchmarks.bench_fig8_predictor"),
+    ("fig9", "benchmarks.bench_fig9_overall"),
+    ("fig13", "benchmarks.bench_fig13_interference"),
+    ("fig14", "benchmarks.bench_fig14_concurrency"),
+    ("fig15", "benchmarks.bench_fig15_context_scaling"),
+    ("fig16", "benchmarks.bench_fig16_breakdown"),
+    ("quality", "benchmarks.bench_quality_validation"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    t_all = time.time()
+    results = {}
+    for name, module in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(module)
+            mod.run(quick=args.quick)
+            results[name] = f"OK ({time.time() - t0:.0f}s)"
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            results[name] = f"FAIL: {type(e).__name__}: {e}"
+    print(f"\n=== benchmark summary ({time.time() - t_all:.0f}s) ===")
+    width = max(len(k) for k in results)
+    failed = 0
+    for k, v in results.items():
+        print(f"  {k.ljust(width)}  {v}")
+        failed += v.startswith("FAIL")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

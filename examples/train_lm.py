@@ -1,0 +1,62 @@
+"""Example: end-to-end training driver — train a ~100M-param dense LM for
+a few hundred steps with checkpointing and a mid-run injected failure
+(supervisor restarts from the last commit; loss curve is continuous).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+
+from repro.configs import TrainConfig, get_config
+from repro.configs.base import ModelConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import build_model
+from repro.training.trainer import FaultInjector, train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--fail-at", type=int, default=None,
+                help="inject a node failure at this step")
+args = ap.parse_args()
+
+# ~100M params: 16L x 640d x 10H, 16k vocab (qwen2.5 family, shrunk)
+base = get_config("qwen2.5-3b")
+cfg = dataclasses.replace(
+    base, name="qwen2.5-100m", num_layers=16, d_model=640, num_heads=10,
+    num_kv_heads=2, head_dim=64, d_ff=2560, vocab_size=16384, remat="none")
+model = build_model(cfg)
+print(f"model: {cfg.name}, {cfg.param_count() / 1e6:.0f}M params")
+
+tcfg = TrainConfig(learning_rate=2e-3, total_steps=args.steps,
+                   warmup_steps=20, checkpoint_every=50, seed=0)
+ckpt_dir = "/tmp/repro_train_lm_example"
+shutil.rmtree(ckpt_dir, ignore_errors=True)
+cm = CheckpointManager(ckpt_dir)
+fault = FaultInjector((args.fail_at,)) if args.fail_at else None
+
+restarts = 0
+while True:
+    try:
+        out = train_loop(model, tcfg, batch=args.batch, seq=args.seq,
+                         steps=args.steps, ckpt_manager=cm, fault=fault,
+                         log_every=10)
+        break
+    except RuntimeError as e:
+        restarts += 1
+        print(f"[supervisor] {e}; restarting from last checkpoint "
+              f"(restart {restarts})")
+        if restarts > 3:
+            raise
+
+print(f"\n{args.steps} steps, {restarts} restarts, "
+      f"{out['wall_s']:.0f}s wall")
+for step, loss in out["history"]:
+    print(f"  step {step:4d}  loss {loss:.4f}")
+first, last = out["history"][0][1], out["final_loss"]
+assert last < first, "loss did not improve"
+print(f"loss {first:.3f} -> {last:.3f}  [improved]")

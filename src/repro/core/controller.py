@@ -1,0 +1,134 @@
+"""Runtime adaptation mechanism (paper §IV-D).
+
+Sliding-window monitors of achieved bandwidth and compute speed drive
+bounded chunk migrations between the streaming and computation paths:
+
+  - wireless bandwidth drop  -> stream path is the transient bottleneck:
+    compute-ready chunks still queued for streaming are executed locally
+    (head of stream queue by compute-priority), plus speculative advance
+    into later-stage compute-ready chunks when the GPU idles.
+  - edge compute contention  -> compute path is the bottleneck: chunks are
+    migrated from the *tail* of the compute order to streaming (tail-first
+    minimizes disturbance to imminent work).
+
+Migrations per stage are bounded (spcfg.max_migrations_per_stage) to avoid
+oscillation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.chunks import Chunk
+
+
+@dataclasses.dataclass
+class Migration:
+    chunk: Chunk
+    to_path: str          # "stream" | "compute"
+    reason: str
+
+
+@dataclasses.dataclass
+class WindowStat:
+    window_s: float
+    samples: deque = dataclasses.field(default_factory=deque)
+
+    def add(self, t: float, value: float):
+        self.samples.append((t, value))
+        self.trim(t)
+
+    def trim(self, now: float):
+        while self.samples and self.samples[0][0] < now - self.window_s:
+            self.samples.popleft()
+
+    def rate(self, now: float) -> Optional[float]:
+        """Sum of values in window / window length."""
+        self.trim(now)
+        if not self.samples:
+            return None
+        return sum(v for _, v in self.samples) / self.window_s
+
+    def mean_ratio(self, now: float) -> Optional[float]:
+        self.trim(now)
+        if not self.samples:
+            return None
+        return float(np.mean([v for _, v in self.samples]))
+
+
+class RuntimeController:
+    def __init__(self, spcfg, plan_bw: float):
+        self.cfg = spcfg
+        self.plan_bw = plan_bw
+        self.bw_win = WindowStat(spcfg.window_s)         # bytes delivered
+        self.comp_win = WindowStat(spcfg.window_s)       # actual/predicted
+        self.migrations_this_stage = 0
+        self.n_migrations = 0
+        self._last_reset = 0.0
+
+    def record_stream(self, t: float, nbytes: float):
+        self.bw_win.add(t, nbytes)
+
+    def record_compute(self, t: float, actual_s: float, predicted_s: float):
+        self.comp_win.add(t, actual_s / max(predicted_s, 1e-9))
+
+    def new_stage(self):
+        self.migrations_this_stage = 0
+
+    def measured_bw(self, now: float) -> float:
+        r = self.bw_win.rate(now)
+        return r if r and r > 0 else self.plan_bw
+
+    def compute_slowdown(self, now: float) -> float:
+        r = self.comp_win.mean_ratio(now)
+        return r if r else 1.0
+
+    def decide(self, now: float, *, stream_queue, comp_queue,
+               ready, chunk_bytes, t_comp_pred) -> list[Migration]:
+        """Called at event boundaries. Queues are lists of Chunks (stream
+        order / compute order); `ready` is the currently compute-ready set.
+        Returns bounded migrations."""
+        cfg = self.cfg
+        # windowed migration budget (paper: bounded per stage to avoid
+        # oscillation; the engine has no stage clock, so budgets reset per
+        # monitor window)
+        if now - self._last_reset >= cfg.window_s:
+            self.migrations_this_stage = 0
+            self._last_reset = now
+        if self.migrations_this_stage >= cfg.max_migrations_per_stage:
+            return []
+        bw = self.measured_bw(now)
+        slow = self.compute_slowdown(now)
+        t_s = sum(chunk_bytes[c] for c in stream_queue) / bw \
+            if stream_queue else 0.0
+        t_c = sum(t_comp_pred[c] for c in comp_queue) * slow \
+            if comp_queue else 0.0
+
+        out: list[Migration] = []
+        budget = cfg.max_migrations_per_stage - self.migrations_this_stage
+        if t_s > cfg.imbalance_threshold * max(t_c, 1e-9) and stream_queue:
+            # network is the bottleneck: pull compute-ready streamed chunks
+            # to the local path (cheapest-compute first), enough to
+            # restore balance
+            cands = [c for c in stream_queue if c in ready]
+            cands.sort(key=lambda c: t_comp_pred[c])
+            moved_s = 0.0
+            for c in cands[:budget]:
+                if t_s - moved_s <= t_c + moved_s:
+                    break
+                out.append(Migration(c, "compute", "bandwidth_drop"))
+                moved_s += chunk_bytes[c] / bw
+        elif t_c > cfg.imbalance_threshold * max(t_s, 1e-9) and comp_queue:
+            # compute is the bottleneck: shed the tail of the compute order
+            moved_c = 0.0
+            for c in list(reversed(comp_queue))[:budget]:
+                if t_c - moved_c <= t_s + moved_c:
+                    break
+                out.append(Migration(c, "stream", "compute_contention"))
+                moved_c += t_comp_pred[c] * slow
+        self.migrations_this_stage += len(out)
+        self.n_migrations += len(out)
+        return out

@@ -1,0 +1,210 @@
+"""Per-chunk streaming / computation cost models + energy accounting.
+
+Two roles:
+ 1. *Planning* costs (what the scheduler sees): t_stream from compressed
+    chunk bytes and profiled mean bandwidth (paper Eq. under (1)); t_comp
+    from the latency predictor (core.predictor).
+ 2. *Ground truth* (what the simulated device does): a nonlinear
+    block-sparse-attention latency function with launch inefficiency,
+    utilization slowdown and noise — the thing the MLP learns and the
+    analytical roofline baseline fails to capture (paper §IV-C / Fig. 8).
+
+Device profiles: the paper's edge platforms plus a TPU-v5e single-chip
+profile (our deployment target).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    peak_flops: float            # dense peak
+    hbm_bw: float                # bytes/s
+    compute_power_w: float       # active compute power
+    nic_power_w: float           # active NIC power
+    idle_power_w: float
+    # block-sparse attention non-idealities (ground truth)
+    eff_max: float               # peak fraction attainable by the kernel
+    s_half: float                # active-block count at half efficiency
+    util_slowdown: float         # slope of contention slowdown
+    kernel_overhead_s: float     # fixed per-chunk launch overhead
+    proc_fixed_s: float          # fixed per-chunk post-reception overhead
+    decode_bw: float             # entropy-decode + dequant throughput (B/s)
+    t_proj_s: float              # final-layer projection-only chunk
+
+    def t_proc(self, nbytes: float) -> float:
+        """Post-reception decode + dequant time for one chunk."""
+        return self.proc_fixed_s + nbytes / self.decode_bw
+
+
+PROFILES: dict[str, DeviceProfile] = {
+    # numbers chosen to land in the paper's measured ranges (Table I, Fig. 3)
+    "jetson-orin": DeviceProfile(
+        "jetson-orin", peak_flops=20e12, hbm_bw=102e9,
+        compute_power_w=25.0, nic_power_w=2.5, idle_power_w=5.0,
+        eff_max=0.060, s_half=24.0, util_slowdown=0.65,
+        kernel_overhead_s=9e-5, proc_fixed_s=8e-5, decode_bw=250e6,
+        t_proj_s=1.2e-4),
+    "jetson-agx": DeviceProfile(
+        "jetson-agx", peak_flops=40e12, hbm_bw=205e9,
+        compute_power_w=30.0, nic_power_w=2.5, idle_power_w=8.0,
+        eff_max=0.068, s_half=20.0, util_slowdown=0.60,
+        kernel_overhead_s=7e-5, proc_fixed_s=6e-5, decode_bw=350e6,
+        t_proj_s=9e-5),
+    "laptop-5080": DeviceProfile(
+        "laptop-5080", peak_flops=110e12, hbm_bw=640e9,
+        compute_power_w=28.0 * 4, nic_power_w=2.0, idle_power_w=15.0,
+        eff_max=0.080, s_half=16.0, util_slowdown=0.55,
+        kernel_overhead_s=4e-5, proc_fixed_s=3e-5, decode_bw=800e6,
+        t_proj_s=5e-5),
+    "redmi-k80": DeviceProfile(
+        "redmi-k80", peak_flops=8e12, hbm_bw=68e9,
+        compute_power_w=9.0, nic_power_w=2.8, idle_power_w=2.0,
+        eff_max=0.050, s_half=30.0, util_slowdown=0.75,
+        kernel_overhead_s=1.5e-4, proc_fixed_s=1.2e-4, decode_bw=120e6,
+        t_proj_s=2e-4),
+    "tpu-v5e-1chip": DeviceProfile(
+        "tpu-v5e-1chip", peak_flops=197e12, hbm_bw=819e9,
+        compute_power_w=170.0, nic_power_w=5.0, idle_power_w=60.0,
+        eff_max=0.450, s_half=12.0, util_slowdown=0.45,
+        kernel_overhead_s=2.5e-5, proc_fixed_s=1e-5, decode_bw=2e9,
+        t_proj_s=3e-5),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkProfile:
+    name: str
+    mean_bw: float               # bytes/s
+    std_bw: float
+    corr_tau_s: float = 0.8      # OU-process correlation time
+    floor_bw: float = 2e6
+
+    def trace(self, rng: np.random.Generator, duration_s: float,
+              dt: float = 0.01) -> np.ndarray:
+        """Ornstein-Uhlenbeck bandwidth trace, clipped at floor."""
+        n = int(np.ceil(duration_s / dt)) + 1
+        out = np.empty(n)
+        x = self.mean_bw
+        a = dt / self.corr_tau_s
+        sig = self.std_bw * np.sqrt(2 * a)
+        for i in range(n):
+            out[i] = x
+            x = x + a * (self.mean_bw - x) + sig * rng.normal()
+        return np.maximum(out, self.floor_bw)
+
+
+NETWORKS: dict[str, NetworkProfile] = {
+    # paper §III: cloud-to-device 850 +- 264 Mbps
+    "campus-wifi": NetworkProfile("campus-wifi", 850e6 / 8, 264e6 / 8),
+    # paper §VI: Wi-Fi 6 testbed end-to-end 0.64 Gbps
+    "wifi6-cloud": NetworkProfile("wifi6-cloud", 640e6 / 8, 200e6 / 8),
+    # congested variants for Fig. 13
+    "congested-2dev": NetworkProfile("congested-2dev", 760e6 / 8, 330e6 / 8),
+    "congested-5dev": NetworkProfile("congested-5dev", 660e6 / 8, 470e6 / 8),
+    # datacenter-ish for the TPU profile
+    "dcn-25g": NetworkProfile("dcn-25g", 25e9 / 8, 2e9 / 8, corr_tau_s=0.2),
+}
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth chunk latency (the simulated device)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GroundTruthLatency:
+    """Nonlinear block-sparse attention latency. Deliberately NOT the
+    roofline form: efficiency saturates with active blocks, contention
+    multiplies, noise is lognormal."""
+    profile: DeviceProfile
+    head_dim: int
+    q_block: int = 128
+    kv_block: int = 128
+    chunk_tokens: int = 1024
+    dtype_bytes: int = 2
+    noise_sigma: float = 0.05
+
+    def block_flops(self) -> float:
+        # qk^T + pv per (q_block, kv_block) tile
+        return 4.0 * self.q_block * self.kv_block * self.head_dim
+
+    def attn_seconds(self, active_blocks: float, util: float,
+                     rng: Optional[np.random.Generator] = None) -> float:
+        p = self.profile
+        s = max(float(active_blocks), 0.0)
+        eff = p.eff_max * s / (s + p.s_half)
+        work = self.block_flops() * s
+        t = work / (p.peak_flops * max(eff, 1e-3)) + p.kernel_overhead_s
+        t *= 1.0 + p.util_slowdown * float(util) / max(1 - 0.9 * float(util),
+                                                       0.1)
+        if rng is not None:
+            t *= float(np.exp(rng.normal(0.0, self.noise_sigma)))
+        return t
+
+    def dense_seconds(self, cfg) -> float:
+        """Per-chunk non-attention ops (qkv/o proj, norm, FFN) — near-
+        constant offset (paper §IV-C)."""
+        d = cfg.d_model
+        ff = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        d_ff_active = (cfg.d_ff if cfg.moe is None
+                       else cfg.d_ff * cfg.moe.experts_per_token)
+        flops = 2 * self.chunk_tokens * (
+            d * (cfg.num_heads + 2 * cfg.num_kv_heads)
+            * cfg.resolved_head_dim
+            + cfg.num_heads * cfg.resolved_head_dim * d
+            + ff * d * d_ff_active)
+        return flops / (self.profile.peak_flops * 0.65)
+
+    def roofline_estimate(self, active_blocks: float) -> float:
+        """The analytical baseline the paper compares against: ignores
+        launch inefficiency, fragmentation and contention."""
+        p = self.profile
+        s = max(float(active_blocks), 0.0)
+        w = self.block_flops() * s
+        q = s * self.kv_block * self.head_dim * 2 * self.dtype_bytes \
+            + self.chunk_tokens * self.head_dim * self.dtype_bytes
+        return max(w / p.peak_flops, q / p.hbm_bw)
+
+
+# ---------------------------------------------------------------------------
+# Streaming cost
+# ---------------------------------------------------------------------------
+
+
+def t_stream(chunk_bytes: float, mean_bw: float, profile) -> float:
+    """Paper: t_stream(c) = b_c / bw-bar + t_proc(c)."""
+    return chunk_bytes / mean_bw + profile.t_proc(chunk_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Energy accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EnergyMeter:
+    profile: DeviceProfile
+    compute_busy_s: float = 0.0
+    nic_busy_s: float = 0.0
+    wall_s: float = 0.0
+
+    def energy_j(self) -> float:
+        p = self.profile
+        return (p.compute_power_w * self.compute_busy_s
+                + p.nic_power_w * self.nic_busy_s
+                + p.idle_power_w * self.wall_s)
+
+    def breakdown(self) -> dict:
+        p = self.profile
+        return {
+            "compute_j": p.compute_power_w * self.compute_busy_s,
+            "nic_j": p.nic_power_w * self.nic_busy_s,
+            "idle_j": p.idle_power_w * self.wall_s,
+            "total_j": self.energy_j(),
+        }

@@ -1,0 +1,253 @@
+"""Discrete-event hybrid execution engine.
+
+Executes a Schedule on a virtual clock with two serial servers:
+  - network: consumes a time-varying bandwidth trace (real compressed chunk
+    bytes), + per-chunk t_proc (entropy decode + dequant);
+  - device: ground-truth block-sparse-attention latencies (nonlinear, load-
+    and noise-dependent — the thing the predictor approximates).
+
+The engine is work-conserving: within the scheduled priority order the
+compute server starts the first dependency-ready chunk. The runtime
+controller (§IV-D) may migrate queued chunks between paths at event
+boundaries. TTFT = context completion + first-token decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.chunks import Chunk, ChunkGrid, State
+from repro.core.controller import RuntimeController
+from repro.core.costs import (DeviceProfile, EnergyMeter, GroundTruthLatency,
+                              NetworkProfile)
+from repro.core.scheduler import Schedule
+
+
+@dataclasses.dataclass
+class EngineResult:
+    ttft_s: float
+    context_done_s: float
+    energy: dict
+    n_streamed: int
+    n_computed: int
+    n_migrations: int
+    stream_busy_s: float
+    compute_busy_s: float
+    proc_busy_s: float
+    timeline: list            # (t_start, t_end, path, chunk)
+    streamed_set: set
+    computed_set: set
+    bytes_streamed: float
+
+    def breakdown(self) -> dict:
+        return {
+            "transmission_s": self.stream_busy_s - self.proc_busy_s,
+            "decode_proc_s": self.proc_busy_s,
+            "compute_s": self.compute_busy_s,
+            "ttft_s": self.ttft_s,
+        }
+
+
+class BandwidthIntegrator:
+    """Cumulative-bytes view over a bandwidth trace."""
+
+    def __init__(self, trace: np.ndarray, dt: float):
+        self.dt = dt
+        self.cum = np.concatenate([[0.0], np.cumsum(trace) * dt])
+
+    def bytes_between(self, t0: float, t1: float) -> float:
+        return self._at(t1) - self._at(t0)
+
+    def _at(self, t: float) -> float:
+        i = t / self.dt
+        i0 = int(np.floor(i))
+        if i0 >= len(self.cum) - 1:
+            # extrapolate with the mean of the tail
+            tail_bw = (self.cum[-1] - self.cum[max(len(self.cum) - 100, 0)]) \
+                / (self.dt * min(99, len(self.cum) - 1))
+            return self.cum[-1] + (t - (len(self.cum) - 1) * self.dt) * tail_bw
+        return self.cum[i0] + (i - i0) * (self.cum[i0 + 1] - self.cum[i0])
+
+    def finish_time(self, t0: float, nbytes: float) -> float:
+        """Earliest t where nbytes are delivered starting at t0."""
+        target = self._at(t0) + nbytes
+        lo, hi = t0, t0 + 1e-3
+        while self._at(hi) < target:
+            hi = t0 + (hi - t0) * 2
+            if hi - t0 > 1e5:
+                break
+        for _ in range(60):
+            mid = 0.5 * (lo + hi)
+            if self._at(mid) < target:
+                lo = mid
+            else:
+                hi = mid
+        return hi
+
+
+def decode_first_token_seconds(cfg, context_len: int,
+                               profile: DeviceProfile) -> float:
+    """One-token forward over the assembled cache (memory-bound)."""
+    if cfg.num_heads:
+        kv_bytes = (2 * context_len * cfg.num_kv_heads
+                    * cfg.resolved_head_dim * 2)
+    else:
+        kv_bytes = 2 * cfg.ssm.state_dim * cfg.d_model * cfg.ssm.expand
+    act = cfg.active_param_count()
+    per_layer = (kv_bytes / profile.hbm_bw
+                 + 2 * (act / max(cfg.num_layers, 1)) / profile.peak_flops)
+    return cfg.num_layers * per_layer + 2 * act * 2 / profile.hbm_bw \
+        / max(cfg.num_layers, 1)
+
+
+@dataclasses.dataclass
+class HybridEngine:
+    grid: ChunkGrid
+    chunk_bytes: dict            # Chunk -> compressed bytes
+    active_blocks: dict          # Chunk -> ground-truth active blocks
+    t_comp_pred: dict            # Chunk -> planner's predicted seconds
+    gt: GroundTruthLatency
+    profile: DeviceProfile
+    bw: BandwidthIntegrator
+    cfg_model: object            # ModelConfig (for dense/proj costs)
+    util: float = 0.0            # external contention (Fig. 14)
+    controller: Optional[RuntimeController] = None
+    seed: int = 0
+
+    def _t_comp_actual(self, c: Chunk, rng) -> float:
+        if c.l == self.grid.n_l - 1:
+            return self.profile.t_proj_s
+        t = self.gt.attn_seconds(self.active_blocks[c], self.util, rng)
+        return t + self.gt.dense_seconds(self.cfg_model) / max(self.grid.n_h, 1)
+
+    def run(self, schedule: Schedule, *, context_len: int) -> EngineResult:
+        rng = np.random.default_rng(self.seed)
+        g = self.grid
+        state = np.zeros(g.size, np.int8)
+
+        stream_q: list[Chunk] = []
+        comp_q: list[Chunk] = []
+        stage_of = {}
+        for si, st in enumerate(schedule.stages):
+            for c in st.stream:
+                stream_q.append(c)
+                stage_of[c] = si
+            for c in st.comp:
+                comp_q.append(c)
+                stage_of[c] = si
+
+        now = 0.0
+        net_free = 0.0
+        dev_free = 0.0
+        net_busy_until = {}
+        done = 0
+        total = g.size
+        timeline = []
+        stream_busy = comp_busy = proc_busy = bytes_streamed = 0.0
+        streamed_set, computed_set = set(), set()
+        n_migr = 0
+        # in-flight: (finish_time, chunk, path)
+        inflight: list[tuple[float, Chunk, str]] = []
+
+        def ready_set():
+            return {c for c in comp_q if g.compute_ready(c, state)}
+
+        guard = 0
+        while done < total:
+            guard += 1
+            if guard > 50 * total + 1000:
+                raise RuntimeError("engine livelock")
+            progressed = False
+            # start network transfer
+            if net_free <= now and stream_q:
+                c = stream_q.pop(0)
+                nbytes = self.chunk_bytes[c]
+                t_proc = self.profile.t_proc(nbytes)
+                t_end = self.bw.finish_time(now, nbytes) + t_proc
+                net_free = t_end
+                inflight.append((t_end, c, "stream"))
+                stream_busy += t_end - now
+                proc_busy += t_proc
+                bytes_streamed += nbytes
+                timeline.append((now, t_end, "stream", c))
+                progressed = True
+            # start compute on first ready chunk in priority order
+            if dev_free <= now:
+                started = None
+                for i, c in enumerate(comp_q):
+                    if g.compute_ready(c, state):
+                        started = comp_q.pop(i)
+                        break
+                if started is not None:
+                    dt = self._t_comp_actual(started, rng)
+                    t_end = now + dt
+                    dev_free = t_end
+                    inflight.append((t_end, started, "compute"))
+                    comp_busy += dt
+                    timeline.append((now, t_end, "compute", started))
+                    if self.controller:
+                        self.controller.record_compute(
+                            t_end, dt, self.t_comp_pred[started])
+                    progressed = True
+            if not inflight:
+                if not progressed:
+                    if comp_q and not stream_q:
+                        # dependency-starved compute chunks (e.g. after a
+                        # bad migration): streaming is always feasible
+                        stream_q.append(comp_q.pop(0))
+                        continue
+                    raise RuntimeError("engine stalled")
+                continue
+            # advance to next completion
+            inflight.sort(key=lambda e: e[0])
+            t_end, c, path = inflight.pop(0)
+            now = max(now, t_end)
+            i = g.index(c)
+            if path == "stream":
+                state[i] = State.STREAMED
+                streamed_set.add(c)
+                if self.controller:
+                    self.controller.record_stream(now, self.chunk_bytes[c])
+            else:
+                state[i] = State.COMPUTED
+                computed_set.add(c)
+            done += 1
+            # controller migrations at event boundary
+            if self.controller is not None:
+                migr = self.controller.decide(
+                    now, stream_queue=stream_q, comp_queue=comp_q,
+                    ready=ready_set() | {cc for cc in stream_q
+                                         if g.compute_ready(cc, state)},
+                    chunk_bytes=self.chunk_bytes,
+                    t_comp_pred=self.t_comp_pred)
+                for m in migr:
+                    if m.to_path == "compute" and m.chunk in stream_q:
+                        stream_q.remove(m.chunk)
+                        comp_q.insert(0, m.chunk)
+                        n_migr += 1
+                    elif m.to_path == "stream" and m.chunk in comp_q:
+                        # never strand a compute-assigned dependent: its
+                        # layer dep requires this chunk to be *computed*
+                        dependent = (m.chunk.l + 1 < g.n_l and
+                                     Chunk(m.chunk.t, m.chunk.l + 1,
+                                           m.chunk.h) in comp_q)
+                        if not dependent:
+                            comp_q.remove(m.chunk)
+                            stream_q.append(m.chunk)
+                            n_migr += 1
+
+        t_first = decode_first_token_seconds(self.cfg_model, context_len,
+                                             self.profile)
+        ttft = now + t_first
+        meter = EnergyMeter(self.profile,
+                            compute_busy_s=comp_busy + t_first,
+                            nic_busy_s=stream_busy, wall_s=ttft)
+        return EngineResult(
+            ttft_s=ttft, context_done_s=now, energy=meter.breakdown(),
+            n_streamed=len(streamed_set), n_computed=len(computed_set),
+            n_migrations=n_migr, stream_busy_s=stream_busy,
+            compute_busy_s=comp_busy, proc_busy_s=proc_busy,
+            timeline=timeline, streamed_set=streamed_set,
+            computed_set=computed_set, bytes_streamed=bytes_streamed)

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (  # noqa: F401
+    Rules, make_rules, use_rules, constrain, current_rules,
+)

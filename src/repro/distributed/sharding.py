@@ -1,0 +1,179 @@
+"""Logical-axis sharding resolver with divisibility-aware fallback.
+
+Models annotate every parameter / activation dim with a *logical* name
+("embed", "heads", "mlp", ...). A :class:`Rules` object maps logical names to
+an ordered tuple of mesh axes; at resolution time the longest prefix of that
+tuple whose size product divides the dim is used (otherwise the dim is
+replicated). This gives one uniform recipe that survives awkward published
+configs (e.g. phi3's 40 heads on a 16-wide model axis → heads replicated,
+sequence-parallel attention instead).
+
+The rules are carried in a contextvar so pure-functional model code can call
+``constrain(x, *names)`` without threading the mesh everywhere. Outside a
+rules context, ``constrain`` is a no-op (single-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    table: dict[str, tuple[str, ...]]
+    weight_stationary: bool = False
+    # logical names that were requested but fell back to replication
+    # (filled lazily; dict for mutation despite frozen dataclass)
+    fallbacks: dict = dataclasses.field(default_factory=dict)
+
+    def axis_size(self, axes: Sequence[str]) -> int:
+        s = 1
+        for a in axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    def resolve(self, name: Optional[str], size: int,
+                used: set[str]) -> Optional[tuple[str, ...]]:
+        """Longest prefix of the candidate axes that divides `size` and does
+        not collide with axes already used by other dims of this tensor."""
+        if name is None:
+            return None
+        cand = self.table.get(name, ())
+        best: tuple[str, ...] = ()
+        for i in range(len(cand), 0, -1):
+            prefix = cand[:i]
+            if any(a in used for a in prefix):
+                continue
+            if size % self.axis_size(prefix) == 0 and self.axis_size(prefix) > 1:
+                best = prefix
+                break
+        if not best:
+            if cand:
+                self.fallbacks.setdefault(name, size)
+            return None
+        return best
+
+    def spec(self, names: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        assert len(names) == len(shape), (names, shape)
+        used: set[str] = set()
+        parts = []
+        for n, s in zip(names, shape):
+            r = self.resolve(n, s, used)
+            if r is None:
+                parts.append(None)
+            else:
+                used.update(r)
+                parts.append(r if len(r) > 1 else r[0])
+        return P(*parts)
+
+    def sharding(self, names: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+
+_RULES: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(tok)
+
+
+def current_rules() -> Optional[Rules]:
+    return _RULES.get()
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical dim names; no-op without rules."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = rules.spec(list(names), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def make_rules(cfg, mesh: Mesh, *, sp_activations: bool = False,
+               weight_stationary: bool = False) -> Rules:
+    """Build the per-arch logical→mesh table.
+
+    Decisions (see DESIGN.md §4):
+      - heads/kv_heads/mlp/experts prefer the "model" axis (tensor/expert
+        parallelism); divisibility fallback handles awkward head counts.
+      - when q-heads do NOT divide the model axis, attention falls back to
+        sequence parallelism: the "seq" logical axis maps to "model".
+      - batch maps to ("pod", "data"); FSDP ("embed_fsdp") to ("pod", "data").
+      - `sp_activations`: additionally shard inter-block activations by seq
+        (Megatron-SP; a §Perf lever) — only meaningful with head-sharded attn.
+    """
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    model_ax = ("model",) if "model" in axes else ()
+
+    msize = mesh.shape["model"] if "model" in axes else 1
+    heads_shardable = cfg.num_heads > 0 and cfg.num_heads % max(msize, 1) == 0
+    kv_shardable = (cfg.num_kv_heads > 0
+                    and cfg.num_kv_heads % max(msize, 1) == 0)
+    experts_shardable = (cfg.moe is not None
+                         and cfg.moe.num_experts % max(msize, 1) == 0)
+
+    # weight-stationary (decode/serving) layout: weights never travel —
+    # the per-step FSDP all-gather of read-only weights dominates decode
+    # collectives (measured 27 GB/device/step on qwen3-moe-235b decode_32k,
+    # EXPERIMENTS.md §Perf). Instead the d_ff/expert dims spread over
+    # model x data and the (tiny at decode) partial activations psum.
+    if weight_stationary and cfg.moe is not None:
+        # MoE decode: expert weights keep an f@data shard and never move;
+        # the token batch (tiny at decode) is gathered instead. Measured
+        # 39.9x lower collective wire on qwen3-moe-235b decode_32k. For
+        # dense archs both alternatives measured worse overall (d@model
+        # psums: 2.9x more wire on phi3; full replication: +14 GiB HBM),
+        # so dense decode keeps the FSDP layout — see EXPERIMENTS.md.
+        fsdp_axes: tuple = ()
+        mlp_axes = data_axes if experts_shardable else model_ax + data_axes
+    else:
+        fsdp_axes = data_axes
+        mlp_axes = () if experts_shardable else model_ax
+
+    table: dict[str, tuple[str, ...]] = {
+        "batch": data_axes,
+        "vocab": model_ax,
+        "embed": (),                 # weight embed dim: see embed_fsdp
+        "embed_fsdp": fsdp_axes,     # FSDP shard of weight embed dims
+        "heads": model_ax if heads_shardable else (),
+        "kv_heads": model_ax if kv_shardable else (),
+        "head_dim": (),
+        "mlp": mlp_axes,
+        "experts": model_ax if experts_shardable else (),
+        "expert_cap": data_axes,     # MoE dispatch-buffer capacity dim
+        "ssm_pdim": model_ax,        # mamba head_dim channels
+        "ssm_heads": (),
+        "state": (),
+        "conv": (),
+        "layers": (),
+        # activations
+        "seq": () if heads_shardable else model_ax,
+        # residual-stream seq dim between blocks (Megatron-SP lever)
+        "block_seq": model_ax if (sp_activations or not heads_shardable) else (),
+        "act_heads": model_ax if heads_shardable else (),
+        "act_kv": model_ax if kv_shardable else (),
+        "act_mlp": () if experts_shardable else model_ax,
+        "act_vocab": model_ax,
+        # KV-cache seq dim: shard over model whenever kv heads cannot —
+        # decode attention over a seq-sharded cache is the flash-decoding
+        # split-K pattern (GSPMD inserts the softmax-stat all-reduce).
+        "kv_seq": () if kv_shardable else model_ax,
+    }
+    return Rules(mesh=mesh, table=table,
+                 weight_stationary=weight_stationary)

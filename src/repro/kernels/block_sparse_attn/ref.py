@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for block-sparse flash attention.
+
+Semantics: for each (batch*head, q_block) row, attention is restricted to
+the kv blocks listed in block_idx[:block_cnt]; causal masking applies
+inside blocks by absolute position. Rows with zero active blocks output 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_mask_dense(block_idx: jax.Array, block_cnt: jax.Array,
+                     n_qb: int, n_kb: int) -> jax.Array:
+    """(bh, n_qb, max_nnz) lists -> (bh, n_qb, n_kb) boolean mask."""
+    bh, nq, mx = block_idx.shape
+    valid = jnp.arange(mx)[None, None, :] < block_cnt[..., None]
+    idx = jnp.where(valid, block_idx, n_kb)            # OOB -> dropped
+    mask = jnp.zeros((bh, nq, n_kb + 1), bool)
+    mask = mask.at[
+        jnp.arange(bh)[:, None, None],
+        jnp.arange(nq)[None, :, None],
+        idx].set(valid, mode="drop")
+    return mask[..., :n_kb]
+
+
+def block_sparse_attention_ref(q, k, v, block_idx, block_cnt, *,
+                               causal: bool = True, q_block: int = 128,
+                               kv_block: int = 128,
+                               scale: float | None = None):
+    """q: (bh, sq, d); k/v: (bh, skv, d) (kv already head-mapped);
+    block_idx/cnt: (bh, n_qb, max_nnz) / (bh, n_qb)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    n_qb = sq // q_block
+    n_kb = skv // kv_block
+    scale = scale if scale is not None else d ** -0.5
+
+    bmask = block_mask_dense(block_idx, block_cnt, n_qb, n_kb)
+    # expand to token resolution
+    tok_mask = jnp.repeat(jnp.repeat(bmask, q_block, axis=1),
+                          kv_block, axis=2)            # (bh, sq, skv)
+    if causal:
+        cm = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        tok_mask = tok_mask & cm
+
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(tok_mask, s, -jnp.inf)
+    row_any = tok_mask.any(-1)
+    m = jnp.max(jnp.where(tok_mask, s, -jnp.inf), axis=-1)
+    m = jnp.where(row_any, m, 0.0)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(tok_mask, p, 0.0)
+    l = p.sum(-1)
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.where(row_any[..., None], o, 0.0)
+    return o.astype(q.dtype)

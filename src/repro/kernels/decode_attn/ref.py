@@ -1,0 +1,23 @@
+"""Oracle for GQA flash-decode: one query token vs a long KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale=None):
+    """q: (b, hq, d); k/v: (b, skv, hkv, d); kv_len: valid cache length."""
+    b, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    mask = jnp.arange(skv)[None, None, :] < kv_len
+    s = jnp.where(mask, s, -jnp.inf)
+    m = s.max(-1, keepdims=True)
+    e = jnp.exp(s - m)
+    e = jnp.where(mask, e, 0.0)
+    o = jnp.einsum("bhk,bkhd->bhd", e, vr.astype(jnp.float32))
+    return (o / jnp.maximum(e.sum(-1)[..., None], 1e-30)).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Pallas TPU fused KV-chunk dequantization.
+
+Streamed chunks arrive as uint8 symbol planes (post entropy decode) plus
+per-group fp32 scales/zeros; this kernel fuses dequantize + cast to bf16
+on-chip so the host never materializes an fp32 copy (on the paper's edge
+path this was the PCIe-attached "device transfer" slice of Fig. 16 — on
+TPU the dequant runs where the cache lives).
+
+Rows are tiled in VMEM-sized blocks; the group dimension stays inside a
+row so a (rows_blk, width) tile always holds whole groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, s_ref, z_ref, o_ref, *, group: int):
+    rows, width = c_ref.shape
+    g = width // group
+    c = c_ref[...].astype(jnp.float32).reshape(rows, g, group)
+    x = c * s_ref[...][..., None] + z_ref[...][..., None]
+    o_ref[...] = x.reshape(rows, width).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "rows_blk", "interpret",
+                                    "out_dtype"))
+def kv_dequant(codes, scales, zeros, *, group: int = 64,
+               rows_blk: int = 256, interpret: bool = True,
+               out_dtype=jnp.bfloat16):
+    """codes: (n, width) uint8, width % group == 0;
+    scales/zeros: (n, width//group) float32 -> (n, width) out_dtype."""
+    n, width = codes.shape
+    g = width // group
+    rows_blk = min(rows_blk, n)
+    grid = (-(-n // rows_blk),)
+    kern = functools.partial(_kernel, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_blk, width), lambda i: (i, 0)),
+            pl.BlockSpec((rows_blk, g), lambda i: (i, 0)),
+            pl.BlockSpec((rows_blk, g), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_blk, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, width), out_dtype),
+        interpret=interpret,
+    )(codes, scales, zeros)

@@ -1,0 +1,39 @@
+"""Wrapper: QuantizedTensor (wire format) -> device KV tensor via the
+fused Pallas dequant kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.quantize import QuantizedTensor
+from repro.kernels.kv_dequant.kernel import kv_dequant
+
+
+def dequantize_chunk(qt: QuantizedTensor, *, interpret: bool | None = None,
+                     out_dtype=jnp.bfloat16):
+    """Dequantize a streamed KV chunk on-device. Returns qt.shape array."""
+    n_vals = int(np.prod(qt.shape))
+    group = qt.group
+    g_total = qt.scales.shape[0]
+    codes = np.zeros(g_total * group, np.uint8)
+    codes[:n_vals] = qt.codes
+    # row layout: pack whole groups per row, <= 8 groups/row
+    gpr = max(1, min(8, g_total))
+    rows = -(-g_total // gpr)
+    pad_g = rows * gpr - g_total
+    codes = codes.reshape(g_total, group)
+    scales, zeros = qt.scales, qt.zeros
+    if pad_g:
+        codes = np.concatenate([codes, np.zeros((pad_g, group), np.uint8)])
+        scales = np.concatenate([scales, np.ones(pad_g, np.float32)])
+        zeros = np.concatenate([zeros, np.zeros(pad_g, np.float32)])
+    codes = codes.reshape(rows, gpr * group)
+    scales = scales.reshape(rows, gpr)
+    zeros = zeros.reshape(rows, gpr)
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    out = kv_dequant(jnp.asarray(codes), jnp.asarray(scales),
+                     jnp.asarray(zeros), group=group, interpret=interp,
+                     out_dtype=out_dtype)
+    return out.reshape(-1)[:n_vals].reshape(qt.shape)

@@ -1,0 +1,16 @@
+"""Oracle for fused KV dequantization: uint8 codes + per-group scale/zero
+-> bf16, matching repro.compression.quantize semantics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kv_dequant_ref(codes, scales, zeros, *, group: int,
+                   out_dtype=jnp.bfloat16):
+    """codes: (n, g*group) uint8 laid out as g groups of `group` values per
+    row; scales/zeros: (n, g) float32. Returns (n, g*group) out_dtype."""
+    n, width = codes.shape
+    g = width // group
+    c = codes.astype(jnp.float32).reshape(n, g, group)
+    x = c * scales[..., None] + zeros[..., None]
+    return x.reshape(n, width).astype(out_dtype)

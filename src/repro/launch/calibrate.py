@@ -1,0 +1,154 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Cost calibration for the roofline table.
+
+XLA's cost_analysis() counts a lax.scan body ONCE (verified: a 10-trip
+scanned matmul reports 1x its flops), so the production compile — which
+scans over layers, kv chunks, and loss chunks — under-reports flops,
+bytes, and collective traffic by large, shape-dependent factors.
+
+Method: compile the SAME cell at two reduced depths (L=a and L=b) with
+every inner scan disabled (attn_chunk/loss_chunk = full sequence: the
+flash/xent scans collapse to a single block; the SSD boundary-state scan
+carries only negligible flops), then extrapolate linearly in depth:
+
+    per_layer = (cost(b) - cost(a)) / (b - a)
+    total     = cost(a) + per_layer * (L_full - a)
+
+Depth units per family: layers (dense/moe/ssm), groups of
+(attn_every mamba + 1 shared attn) for hybrid, (enc+dec) layer pairs for
+encdec. Collectives are extrapolated the same way. memory_analysis still
+comes from the full-depth production compile (launch.dryrun).
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.distributed.roofline import parse_collectives, roofline_terms
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def _depth_points(cfg):
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every, \
+            cfg.num_layers // cfg.attn_every, cfg.attn_every
+    return 2, 4, cfg.num_layers, 1
+
+
+def _reduced(cfg, n_layers: int, seq_len: int):
+    kw = dict(num_layers=n_layers, attn_chunk=max(seq_len, 2048),
+              loss_chunk=max(seq_len, 2048), remat="none",
+              scan_unroll=max(n_layers, 8))
+    if cfg.family == "encdec":
+        kw["dec_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(arch_cfg, shape_name: str, mesh, sp_activations):
+    """Compile one reduced cell, return (flops, bytes, coll_wire, coll_by_kind)."""
+    import repro.launch.dryrun as dr
+    import repro.configs as C
+
+    # temporarily register the reduced config under the arch name
+    name = arch_cfg.name
+    orig = C.get_config
+
+    def patched(n):
+        if n == name:
+            return arch_cfg
+        return orig(n)
+
+    C.get_config = patched
+    dr.get_config = patched
+    saved_micro = dict(dr.MICROBATCHES)
+    dr.MICROBATCHES.clear()   # accumulation scans would re-hide flops
+    try:
+        fn, args, in_sh, out_sh, donate = build_cell(
+            name, shape_name, mesh, sp_activations=sp_activations)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        compiled = jitted.lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+        return (float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)),
+                coll.wire_bytes, dict(coll.by_kind))
+    finally:
+        C.get_config = orig
+        dr.get_config = orig
+        dr.MICROBATCHES.update(saved_micro)
+
+
+def calibrate_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                   sp_activations=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "SKIP", "reason": why}
+    if sp_activations is None:
+        sp_activations = shape.kind == "train"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    a, b, full_units, per_unit_layers = _depth_points(cfg)
+
+    fa = _measure(_reduced(cfg, a, shape.seq_len), shape_name, mesh,
+                  sp_activations)
+    fb = _measure(_reduced(cfg, b, shape.seq_len), shape_name, mesh,
+                  sp_activations)
+
+    ua, ub = a // per_unit_layers, b // per_unit_layers
+    out = {}
+    for i, key in enumerate(("flops", "bytes", "coll_wire")):
+        per_unit = (fb[i] - fa[i]) / (ub - ua)
+        out[key] = fa[i] + per_unit * (full_units - ua)
+        out[key + "_per_unit"] = per_unit
+    out["points"] = {"a_layers": a, "b_layers": b,
+                     "a": {"flops": fa[0], "bytes": fa[1],
+                           "coll_wire": fa[2]},
+                     "b": {"flops": fb[0], "bytes": fb[1],
+                           "coll_wire": fb[2]}}
+    out["status"] = "OK"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="results/calibration")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED_ARCHS
+    archs = ASSIGNED_ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    multi = args.mesh == "multi"
+    tag = "pod2x16x16" if multi else "pod16x16"
+    os.makedirs(os.path.join(args.out, tag), exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            path = os.path.join(args.out, tag, f"{arch}__{shape}.json")
+            if args.skip_existing and os.path.exists(path):
+                continue
+            try:
+                rec = calibrate_cell(arch, shape, multi_pod=multi)
+            except Exception as e:  # noqa: BLE001
+                rec = {"status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+            rec.update(arch=arch, shape=shape, mesh=tag)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            st = rec["status"]
+            extra = "" if st != "OK" else \
+                f" flops={rec['flops']:.3e} bytes={rec['bytes']:.3e} " \
+                f"coll={rec['coll_wire']:.3e}"
+            print(f"[{tag}] {arch} x {shape}: {st}{extra}")
+
+
+if __name__ == "__main__":
+    main()

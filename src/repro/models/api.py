@@ -1,0 +1,136 @@
+"""Unified model facade: one object per architecture family exposing
+
+  init / abstract_params / param_pspecs
+  loss(params, batch)            -- train_step target
+  prefill(params, inputs)        -- inference-prefill target
+  decode_step(params, cache, token, pos)  -- serve_step target
+  input_specs(shape) / input_pspecs(shape, rules)
+
+so the launcher, dry-run, trainer and serving engine are family-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import transformer, mamba_lm, hybrid, encdec
+
+# The decode context cache is exactly seq_len (read-only, seq-shardable);
+# newly generated tokens live in the replicated tail buffer
+# (transformer.DECODE_TAIL). Historical note, kept for the §Perf log: an
+# earlier +8 margin made capacity 32776, silently breaking kv_seq
+# sharding (divisibility fallback -> 48 GiB/device replicated caches).
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    _mod: Any
+
+    # ---- params ----
+    def param_defs(self):
+        return self._mod.param_defs(self.cfg)
+
+    def abstract_params(self):
+        return L.abstract_params(self.param_defs())
+
+    def init(self, rng):
+        return L.init_params(self.param_defs(), rng)
+
+    def param_pspecs(self, rules):
+        return L.pspec_tree(self.param_defs(), rules)
+
+    def param_shardings(self, rules):
+        return L.sharding_tree(self.param_defs(), rules)
+
+    # ---- compute ----
+    def loss(self, params, batch):
+        return self._mod.loss_fn(self.cfg, params, batch)
+
+    def prefill(self, params, inputs):
+        if self.cfg.family == "encdec":
+            return self._mod.prefill(self.cfg, params, inputs["frames"])
+        return self._mod.prefill(self.cfg, params, inputs["tokens"])
+
+    def decode_step(self, params, cache, token, pos):
+        return self._mod.decode_step(self.cfg, params, cache, token, pos)
+
+    def init_cache(self, batch: int, capacity: int):
+        return self._mod.init_cache(self.cfg, batch, capacity)
+
+    def cache_axes(self):
+        return self._mod.cache_axes(self.cfg)
+
+    # ---- abstract inputs for dry-run ----
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        if cfg.family == "encdec":
+            if shape.kind == "train":
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                       jnp.bfloat16),
+                        "dec_tokens": jax.ShapeDtypeStruct(
+                            (b, cfg.dec_len + 1), jnp.int32)}
+            if shape.kind == "prefill":
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                       jnp.bfloat16)}
+            # decode: cross-KV over s encoder states + self cache
+            cache = jax.eval_shape(
+                lambda: self._mod.init_cache(cfg, b, s))
+            return {"cache": cache,
+                    "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                    "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        cache = jax.eval_shape(lambda: self._mod.init_cache(cfg, b, s))
+        return {"cache": cache,
+                "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_pspecs(self, shape: ShapeConfig, rules) -> dict:
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        specs = self.input_specs(shape)
+        out: dict = {}
+        for name, v in specs.items():
+            if name == "tokens":
+                out[name] = rules.spec(("batch", None), v.shape)
+            elif name == "dec_tokens":
+                out[name] = rules.spec(("batch", None), v.shape)
+            elif name == "frames":
+                out[name] = rules.spec(("batch", "block_seq", None), v.shape)
+            elif name == "token":
+                out[name] = rules.spec(("batch",), v.shape)
+            elif name == "pos":
+                out[name] = P()
+            elif name == "cache":
+                axes = self.cache_axes()
+                out[name] = jax.tree.map(
+                    lambda sds, ax: rules.spec(ax, sds.shape), v, axes,
+                    is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            else:
+                raise KeyError(name)
+        return out
+
+    def train_batch_shape(self, shape: ShapeConfig) -> dict:
+        return self.input_specs(shape)
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "hybrid": hybrid,
+    "ssm": mamba_lm,
+    "encdec": encdec,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, _mod=_FAMILY_MODULES[cfg.family])

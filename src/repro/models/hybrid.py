@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every `attn_every` layers (re-using the same parameters, separate KV
+per application) [arXiv:2411.15242].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as T
+from repro.models.layers import ParamDef
+
+
+def n_attn_apps(cfg) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def param_defs(cfg) -> dict:
+    n = cfg.num_layers
+    assert n % cfg.attn_every == 0
+    return {
+        "emb": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed")),
+        "final_norm": L.norm_defs(cfg, cfg.d_model),
+        "blocks": {
+            "norm": L.norm_defs(cfg, cfg.d_model, prefix_shape=(n,)),
+            "ssm": ssm.ssm_defs(cfg, stacked=n),
+        },
+        "shared": {
+            "attn_norm": L.norm_defs(cfg, cfg.d_model),
+            "mlp_norm": L.norm_defs(cfg, cfg.d_model),
+            "attn": L.attention_defs(cfg),
+            "mlp": L.mlp_defs(cfg),
+        },
+    }
+
+
+def _group_params(cfg, params):
+    """Reshape stacked (L, ...) mamba params to (groups, attn_every, ...)."""
+    g, k = n_attn_apps(cfg), cfg.attn_every
+    return jax.tree.map(lambda a: a.reshape((g, k) + a.shape[1:]),
+                        params["blocks"])
+
+
+def _shared_attn(cfg, sp, x, positions, *, kv_cache=None, pos=None):
+    h = L.apply_norm(cfg, x, sp["attn_norm"])
+    q, k, v = L.attention_qkv(cfg, sp["attn"], h, positions)
+    if kv_cache is None:
+        o = L.flash_attention(q, k, v, causal=True,
+                              kv_chunk=cfg.attn_chunk)
+        new_kv = (k, v)
+    else:
+        # static context + replicated tail (see transformer.DECODE_TAIL)
+        ctx_k, ctx_v, tail_k, tail_v = kv_cache
+        o, tail_k, tail_v = T.decode_attention(
+            cfg, sp["attn"], q, k, v, ctx_k, ctx_v, tail_k, tail_v,
+            pos - ctx_k.shape[1])
+        new_kv = (tail_k, tail_v)
+    x = x + L.attention_out(sp["attn"], o)
+    x = constrain(x, "batch", "block_seq", None)
+    h = L.apply_norm(cfg, x, sp["mlp_norm"])
+    x = x + L.mlp_block(cfg, sp["mlp"], h)
+    return constrain(x, "batch", "block_seq", None), new_kv
+
+
+def forward(cfg, params, tokens, *, collect: bool = False):
+    x = jnp.take(params["emb"], tokens, axis=0)
+    x = constrain(x, "batch", "block_seq", None)
+    positions = jnp.arange(tokens.shape[1])
+    gp = _group_params(cfg, params)
+    sp = params["shared"]
+
+    def inner(x, bp):
+        h = L.apply_norm(cfg, x, bp["norm"])
+        y, cache = ssm.ssm_block(cfg, bp["ssm"], h, return_state=collect)
+        x = x + y
+        return constrain(x, "batch", "block_seq", None), cache
+
+    inner = T._remat(cfg, inner)
+    # the shared attention block must be rematerialized too: un-rematted,
+    # its per-kv-chunk softmax residuals dominate train memory (~34 GiB/dev
+    # measured on zamba2 train_4k — EXPERIMENTS.md §Perf).
+    shared_attn = T._remat(cfg, lambda x: _shared_attn(cfg, sp, x, positions))
+
+    def group(x, bp_g):
+        x, ssm_caches = jax.lax.scan(inner, x, bp_g,
+                                      unroll=cfg.scan_unroll)
+        x, kv = shared_attn(x)
+        ys = (ssm_caches, kv) if collect else None
+        return x, ys
+
+    x, caches = jax.lax.scan(group, x, gp, unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    return x, caches
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    x, _ = forward(cfg, params, inp)
+    tot = T.softmax_xent(cfg, params, x, labels, mask)
+    return tot / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(cfg, params, tokens):
+    x, caches = forward(cfg, params, tokens, collect=True)
+    ssm_caches, kvs = caches
+    logits = T.unembed(cfg, params, x[:, -1:, :])[:, 0, :]
+    # ssm_caches leaves: (groups, attn_every, b, ...) -> flatten layer dims
+    flat = jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), ssm_caches)
+    return logits, {"ssm": flat, "attn_k": kvs[0], "attn_v": kvs[1]}
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    n_l, g = cfg.num_layers, n_attn_apps(cfg)
+    d_inner, h, p, n = ssm.ssm_dims(cfg)
+    ch = ssm.conv_cache_channels(cfg)
+    return {
+        "ssm": {
+            "conv": jnp.zeros((n_l, batch, cfg.ssm.conv_width - 1, ch), dtype),
+            "state": jnp.zeros((n_l, batch, h, p, n), jnp.float32),
+        },
+        "attn_k": jnp.zeros((g, batch, capacity, cfg.num_kv_heads,
+                             cfg.resolved_head_dim), dtype),
+        "attn_v": jnp.zeros((g, batch, capacity, cfg.num_kv_heads,
+                             cfg.resolved_head_dim), dtype),
+        "attn_tail_k": jnp.zeros((g, batch, T.DECODE_TAIL,
+                                  cfg.num_kv_heads,
+                                  cfg.resolved_head_dim), dtype),
+        "attn_tail_v": jnp.zeros((g, batch, T.DECODE_TAIL,
+                                  cfg.num_kv_heads,
+                                  cfg.resolved_head_dim), dtype),
+    }
+
+
+def cache_axes(cfg):
+    kv = ("layers", "batch", "kv_seq", "act_kv", None)
+    tl = ("layers", "batch", None, "act_kv", None)
+    return {
+        "ssm": {
+            "conv": ("layers", "batch", None, None),
+            "state": ("layers", "batch", "ssm_heads", "ssm_pdim", "state"),
+        },
+        "attn_k": kv, "attn_v": kv,
+        "attn_tail_k": tl, "attn_tail_v": tl,
+    }
+
+
+def decode_step(cfg, params, cache, token, pos):
+    x = jnp.take(params["emb"], token[:, None], axis=0)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+    gp = _group_params(cfg, params)
+    sp = params["shared"]
+    k_per = cfg.attn_every
+
+    def inner(carry, bp):
+        x, conv_c, state_c, l = carry
+        cache_l = {
+            "conv": jax.lax.dynamic_index_in_dim(conv_c, l, 0, keepdims=False),
+            "state": jax.lax.dynamic_index_in_dim(state_c, l, 0, keepdims=False),
+        }
+        h = L.apply_norm(cfg, x, bp["norm"])
+        y, nc = ssm.ssm_block(cfg, bp["ssm"], h, cache=cache_l)
+        x = x + y
+        conv_c = jax.lax.dynamic_update_index_in_dim(
+            conv_c, nc["conv"].astype(conv_c.dtype), l, 0)
+        state_c = jax.lax.dynamic_update_index_in_dim(
+            state_c, nc["state"].astype(state_c.dtype), l, 0)
+        return (x, conv_c, state_c, l + 1), None
+
+    def group(carry, xs):
+        x, conv_c, state_c, tk, tv, gi, l = carry
+        bp_g, ctx_k, ctx_v = xs
+        (x, conv_c, state_c, l), _ = jax.lax.scan(
+            inner, (x, conv_c, state_c, l), bp_g,
+            unroll=cfg.scan_unroll)
+        kv_g = (ctx_k, ctx_v,
+                jax.lax.dynamic_index_in_dim(tk, gi, 0, keepdims=False),
+                jax.lax.dynamic_index_in_dim(tv, gi, 0, keepdims=False))
+        x, (nk, nv) = _shared_attn(cfg, sp, x, positions,
+                                   kv_cache=kv_g, pos=pos)
+        tk = jax.lax.dynamic_update_index_in_dim(tk, nk, gi, 0)
+        tv = jax.lax.dynamic_update_index_in_dim(tv, nv, gi, 0)
+        return (x, conv_c, state_c, tk, tv, gi + 1, l), None
+
+    carry = (x, cache["ssm"]["conv"], cache["ssm"]["state"],
+             cache["attn_tail_k"], cache["attn_tail_v"],
+             jnp.int32(0), jnp.int32(0))
+    (x, conv_c, state_c, tk, tv, _, _), _ = jax.lax.scan(
+        group, carry, (gp, cache["attn_k"], cache["attn_v"]),
+        unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = T.unembed(cfg, params, x)[:, 0, :]
+    return logits, dict(cache,
+                        ssm={"conv": conv_c, "state": state_c},
+                        attn_tail_k=tk, attn_tail_v=tv)

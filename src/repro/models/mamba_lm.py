@@ -1,0 +1,103 @@
+"""Pure-SSM LM (mamba2-130m): scanned Mamba2 blocks, no attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as T
+from repro.models.layers import ParamDef
+
+
+def param_defs(cfg) -> dict:
+    n = cfg.num_layers
+    return {
+        "emb": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed")),
+        "final_norm": L.norm_defs(cfg, cfg.d_model),
+        "blocks": {
+            "norm": L.norm_defs(cfg, cfg.d_model, prefix_shape=(n,)),
+            "ssm": ssm.ssm_defs(cfg, stacked=n),
+        },
+    }
+
+
+def forward(cfg, params, tokens, *, collect_state: bool = False):
+    x = jnp.take(params["emb"], tokens, axis=0)
+    x = constrain(x, "batch", "block_seq", None)
+
+    def body(x, bp):
+        h = L.apply_norm(cfg, x, bp["norm"])
+        y, cache = ssm.ssm_block(cfg, bp["ssm"], h,
+                                 return_state=collect_state)
+        x = x + y
+        x = constrain(x, "batch", "block_seq", None)
+        return x, cache
+
+    body = T._remat(cfg, body)
+    x, caches = jax.lax.scan(body, x, params["blocks"],
+                             unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    return x, caches
+
+
+def loss_fn(cfg, params, batch):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    x, _ = forward(cfg, params, inp)
+    tot = T.softmax_xent(cfg, params, x, labels, mask)
+    return tot / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(cfg, params, tokens):
+    x, caches = forward(cfg, params, tokens, collect_state=True)
+    logits = T.unembed(cfg, params, x[:, -1:, :])[:, 0, :]
+    return logits, caches
+
+
+def init_cache(cfg, batch: int, capacity: int = 0, dtype=jnp.bfloat16):
+    del capacity  # SSM state is O(1) in context length
+    n_l = cfg.num_layers
+    d_inner, h, p, n = ssm.ssm_dims(cfg)
+    ch = ssm.conv_cache_channels(cfg)
+    return {
+        "conv": jnp.zeros((n_l, batch, cfg.ssm.conv_width - 1, ch), dtype),
+        "state": jnp.zeros((n_l, batch, h, p, n), jnp.float32),
+    }
+
+
+def cache_axes(cfg):
+    return {
+        "conv": ("layers", "batch", None, None),
+        "state": ("layers", "batch", "ssm_heads", "ssm_pdim", "state"),
+    }
+
+
+def decode_step(cfg, params, cache, token, pos):
+    del pos  # recurrent state carries position implicitly
+    x = jnp.take(params["emb"], token[:, None], axis=0)
+
+    def body(carry, bp):
+        x, conv_c, state_c, l = carry
+        cache_l = {
+            "conv": jax.lax.dynamic_index_in_dim(conv_c, l, 0, keepdims=False),
+            "state": jax.lax.dynamic_index_in_dim(state_c, l, 0, keepdims=False),
+        }
+        h = L.apply_norm(cfg, x, bp["norm"])
+        y, new_c = ssm.ssm_block(cfg, bp["ssm"], h, cache=cache_l)
+        x = x + y
+        conv_c = jax.lax.dynamic_update_index_in_dim(
+            conv_c, new_c["conv"].astype(conv_c.dtype), l, 0)
+        state_c = jax.lax.dynamic_update_index_in_dim(
+            state_c, new_c["state"].astype(state_c.dtype), l, 0)
+        return (x, conv_c, state_c, l + 1), None
+
+    (x, conv_c, state_c, _), _ = jax.lax.scan(
+        body, (x, cache["conv"], cache["state"], jnp.int32(0)),
+        params["blocks"], unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = T.unembed(cfg, params, x)[:, 0, :]
+    return logits, {"conv": conv_c, "state": state_c}

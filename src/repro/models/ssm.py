@@ -1,0 +1,248 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD algorithm in matmul form (MXU-friendly): intra-chunk outputs via
+masked score matmuls, inter-chunk recurrence via a lax.scan over chunk
+boundary states. This *is* the TPU-adapted algorithm (the paper's Triton
+kernel maps onto the same chunked matmuls); a Pallas kernel for the
+intra-chunk part lives in repro.kernels.ssd_scan.
+
+Projections are kept as separate named weights (x, z, B, C, dt) rather than
+one fused in_proj so each can carry its own sharding axes (ssm_pdim over the
+model axis — head counts of published configs do not divide 16, P=64 does).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.layers import ParamDef
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.head_dim, s.state_dim
+
+
+def ssm_defs(cfg, *, stacked: int = 0) -> dict:
+    d = cfg.d_model
+    d_inner, h, p, n = ssm_dims(cfg)
+    cw = cfg.ssm.conv_width
+    pre = (stacked,) if stacked else ()
+    pax = ("layers",) if stacked else ()
+    return {
+        "wx": ParamDef(pre + (d, h, p), pax + ("embed_fsdp", "ssm_heads", "ssm_pdim")),
+        "wz": ParamDef(pre + (d, h, p), pax + ("embed_fsdp", "ssm_heads", "ssm_pdim")),
+        "wB": ParamDef(pre + (d, n), pax + ("embed_fsdp", "state")),
+        "wC": ParamDef(pre + (d, n), pax + ("embed_fsdp", "state")),
+        "wdt": ParamDef(pre + (d, h), pax + ("embed_fsdp", "ssm_heads")),
+        "dt_bias": ParamDef(pre + (h,), pax + ("ssm_heads",), init="zeros"),
+        "A_log": ParamDef(pre + (h,), pax + ("ssm_heads",), init="zeros"),
+        "D": ParamDef(pre + (h,), pax + ("ssm_heads",), init="ones"),
+        # depthwise causal conv over x channels (h*p) and B, C (n each)
+        "conv_x": ParamDef(pre + (cw, h, p), pax + ("conv", "ssm_heads", "ssm_pdim"),
+                           scale=0.5),
+        "conv_B": ParamDef(pre + (cw, n), pax + ("conv", "state"), scale=0.5),
+        "conv_C": ParamDef(pre + (cw, n), pax + ("conv", "state"), scale=0.5),
+        "norm": ParamDef(pre + (h, p), pax + ("ssm_heads", "ssm_pdim"),
+                         init="zeros"),
+        "wo": ParamDef(pre + (h, p, d), pax + ("ssm_heads", "ssm_pdim", "embed_fsdp"),
+                       scale=0.02 / np.sqrt(2 * max(cfg.num_layers, 1))),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (b, s, c), w: (cw, c)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _segsum(dA):
+    """Cumulative log-decay matrix: out[..., i, j] = sum_{j<k<=i} dA[..., k].
+
+    dA: (..., cl); returns (..., cl, cl), -inf above diagonal.
+    """
+    cl = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]                # i row, j col
+    ii = jnp.arange(cl)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk_len: int,
+                init_state: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   inputs (already conv'd / activated)
+    dt: (b, s, h)      positive step sizes
+    A:  (h,)           negative decay rates
+    B:  (b, s, n), C: (b, s, n)   (ngroups=1, shared across heads)
+    Returns y: (b, s, h, p) (+ final state (b, h, p, n) if return_state).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    cl = min(chunk_len, s)
+    nc = -(-s // cl)
+    pad = nc * cl - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(b, nc, cl, h, p)
+    dtc = dt.reshape(b, nc, cl, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, cl, n)
+    Cc = C.reshape(b, nc, cl, n)
+
+    cdt = x.dtype                                             # compute dtype
+    dA = dtc * A.astype(jnp.float32)                          # (b,nc,cl,h) <= 0
+    dA_cum = jnp.cumsum(dA, axis=2)                           # within chunk
+
+    # ---- intra-chunk (quadratic within cl, matmul form) ----
+    scores = jnp.einsum("bzin,bzjn->bzij", Cc, Bc,
+                        preferred_element_type=jnp.float32)   # (b,nc,cl,cl)
+    Ldec = _segsum(jnp.moveaxis(dA, 3, 2))                    # (b,nc,h,cl,cl)
+    # form the masked-decay score matrix directly in compute dtype: the
+    # (b,nc,h,cl,cl) buffers dominate SSD memory (measured 166 GiB/dev on
+    # zamba2 train_4k in fp32 at cl=256 — see EXPERIMENTS.md §Perf).
+    M = scores.astype(cdt)[:, :, None] * jnp.exp(Ldec).astype(cdt)
+    M = M * dtc.astype(cdt).transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", M, xc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk boundary states ----
+    # state contribution of chunk z: sum_j exp(dA_cum[last]-dA_cum[j]) dt_j B_j x_j
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)     # (b,nc,cl,h)
+    xw = xc * (dtc * decay_to_end).astype(cdt)[..., None]     # (b,nc,cl,h,p)
+    S = jnp.einsum("bzjn,bzjhp->bzhpn", Bc, xw,
+                   preferred_element_type=jnp.float32)        # (b,nc,h,p,n)
+
+    # ---- inter-chunk recurrence over nc ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                # (b,nc,h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(state, inp):
+        S_z, dec_z = inp                                      # (b,h,p,n),(b,h)
+        out = state
+        state = state * dec_z[:, :, None, None] + S_z
+        return state, out
+
+    Ss = jnp.moveaxis(S, 1, 0)
+    decs = jnp.moveaxis(chunk_decay, 1, 0)
+    final_state, states_before = jax.lax.scan(
+        body, init_state.astype(jnp.float32), (Ss, decs))
+    states_before = jnp.moveaxis(states_before, 0, 1)         # (b,nc,h,p,n)
+
+    # ---- inter-chunk outputs ----
+    # decay factors out of the n-contraction:
+    #   y[i,h,p] = exp(dA_cum[i,h]) * sum_n C[i,n] state[h,p,n]
+    y_inter = jnp.einsum("bzin,bzhpn->bzihp", Cc,
+                         states_before.astype(cdt),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(dA_cum)[:, :, :, :, None]
+
+    y = (y_intra + y_inter).reshape(b, nc * cl, h, p)[:, :s]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssm_block(cfg, p, x, *, cache=None, return_state=False):
+    """Full Mamba2 block: proj -> conv -> SSD -> gated norm -> out proj.
+
+    x: (b, s, d). cache (decode): {"conv": (b, cw-1, ch), "state": (b,h,p,n)}.
+    Returns (y, new_cache_or_None).
+    """
+    s_cfg = cfg.ssm
+    d_inner, h, pd, n = ssm_dims(cfg)
+    b, s, _ = x.shape
+
+    xi = jnp.einsum("bsd,dhp->bshp", x, p["wx"])
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"])
+    Bv = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cv = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xi = constrain(xi, "batch", "seq", None, "ssm_pdim")
+
+    xflat = xi.reshape(b, s, h * pd)
+    convw = p["conv_x"].reshape(s_cfg.conv_width, h * pd)
+    new_cache = None
+    if cache is None:
+        xconv = _causal_conv(xflat, convw)
+        Bconv = _causal_conv(Bv, p["conv_B"])
+        Cconv = _causal_conv(Cv, p["conv_C"])
+        if return_state:
+            cw = s_cfg.conv_width
+            tail = jnp.concatenate(
+                [xflat, Bv, Cv], axis=-1)[:, -(cw - 1):, :]
+            if s < cw - 1:
+                tail = jnp.pad(tail, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+            new_cache = {"conv": tail}
+    else:
+        # decode: s == 1; shift conv window
+        cat = jnp.concatenate([xflat, Bv, Cv], axis=-1)       # (b,1,ch)
+        win = jnp.concatenate([cache["conv"], cat], axis=1)   # (b,cw,ch)
+        allw = jnp.concatenate(
+            [convw, p["conv_B"], p["conv_C"]], axis=-1)       # (cw,ch)
+        conv_out = jnp.sum(win.astype(jnp.float32) *
+                           allw.astype(jnp.float32)[None], axis=1,
+                           keepdims=True).astype(x.dtype)     # (b,1,ch)
+        xconv = conv_out[..., :h * pd]
+        Bconv = conv_out[..., h * pd:h * pd + n]
+        Cconv = conv_out[..., h * pd + n:]
+        new_cache = {"conv": win[:, 1:, :]}
+
+    xact = jax.nn.silu(xconv.astype(jnp.float32)).astype(x.dtype)
+    xact = xact.reshape(b, s, h, pd)
+    Bact = jax.nn.silu(Bconv.astype(jnp.float32)).astype(x.dtype)
+    Cact = jax.nn.silu(Cconv.astype(jnp.float32)).astype(x.dtype)
+
+    if cache is None:
+        out = ssd_chunked(xact, dt, A, Bact, Cact,
+                          chunk_len=s_cfg.chunk_len,
+                          return_state=return_state)
+        y, final_state = out if return_state else (out, None)
+        if return_state:
+            new_cache["state"] = final_state
+    else:
+        # single-step recurrence
+        dA = jnp.exp(dt[:, 0, :] * A)                          # (b,h)
+        dBx = jnp.einsum("bn,bhp->bhpn", (Bact[:, 0] * 1.0),
+                         xact[:, 0] * dt[:, 0, :, None].astype(x.dtype))
+        state = cache["state"] * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state.astype(x.dtype), Cact[:, 0])
+        y = y[:, None]                                         # (b,1,h,p)
+        new_cache["state"] = state
+
+    y = y + xact * p["D"].astype(x.dtype)[None, None, :, None]
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-6)
+    g = (g * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bshp,hpd->bsd", g, p["wo"])
+    return out, new_cache
+
+
+def conv_cache_channels(cfg) -> int:
+    d_inner, h, pd, n = ssm_dims(cfg)
+    return h * pd + 2 * n

@@ -1,0 +1,230 @@
+"""Decoder-only transformer LM (dense and MoE families).
+
+Layers are scanned (stacked params, lax.scan) so the 94-layer MoE compiles
+fast; each layer body is rematerialized per cfg.remat.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.layers import ParamDef
+
+
+def param_defs(cfg) -> dict:
+    n = cfg.num_layers
+    defs = {
+        "emb": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed")),
+        "final_norm": L.norm_defs(cfg, cfg.d_model),
+        "blocks": {
+            "attn_norm": L.norm_defs(cfg, cfg.d_model, prefix_shape=(n,)),
+            "mlp_norm": L.norm_defs(cfg, cfg.d_model, prefix_shape=(n,)),
+            "attn": L.attention_defs(cfg, stacked=n),
+        },
+    }
+    if cfg.moe is not None:
+        defs["blocks"]["moe"] = L.moe_defs(cfg, stacked=n)
+    else:
+        defs["blocks"]["mlp"] = L.mlp_defs(cfg, stacked=n)
+    if not cfg.tie_embeddings:
+        defs["unemb"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                 ("embed_fsdp", "vocab"))
+    return defs
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# capacity of the replicated decode tail buffer (newly generated tokens).
+# The *context* cache stays read-only and seq-sharded: a dynamic-index
+# update into a model-sharded seq dim makes GSPMD all-gather the cache
+# every layer (measured 8.6 GB/device/layer — EXPERIMENTS.md §Perf).
+DECODE_TAIL = 128
+
+
+def decode_attention(cfg, bp_attn, q, k, v, ctx_k, ctx_v, tail_k, tail_v,
+                     tail_pos):
+    """Attend a single new token over [static context] + [tail buffer].
+
+    ctx_*: (b, cap, hkv, hd) read-only, possibly seq-sharded;
+    tail_*: (b, DECODE_TAIL, hkv, hd) replicated; the new (k, v) is first
+    written at tail_pos (local update). Returns (o, tail_k, tail_v)."""
+    tail_k = jax.lax.dynamic_update_slice(tail_k, k, (0, tail_pos, 0, 0))
+    tail_v = jax.lax.dynamic_update_slice(tail_v, v, (0, tail_pos, 0, 0))
+    p1 = L.flash_attention(q, ctx_k, ctx_v, causal=False,
+                           kv_chunk=max(cfg.attn_chunk, 2048),
+                           return_stats=True)
+    p2 = L.flash_attention(q, tail_k, tail_v, causal=False,
+                           kv_len=tail_pos + 1, kv_chunk=DECODE_TAIL,
+                           return_stats=True)
+    o = L.merge_attention([p1, p2])
+    return o, tail_k, tail_v
+
+
+def _block(cfg, bp, x, positions, *, causal=True, kv_cache=None, pos=None):
+    """One transformer block. Returns (x, (k, v) | tail update, aux).
+
+    kv_cache: optional (ctx_k, ctx_v, tail_k, tail_v) for decode; `pos`
+    is the *global* position (tail_pos = pos - ctx capacity). When
+    kv_cache is None the block runs self-attention over its own sequence
+    (train/prefill)."""
+    h = L.apply_norm(cfg, x, bp["attn_norm"])
+    q, k, v = L.attention_qkv(cfg, bp["attn"], h, positions)
+    if kv_cache is None:
+        o = L.flash_attention(q, k, v, causal=causal,
+                              kv_chunk=cfg.attn_chunk)
+        new_kv = (k, v)
+    else:
+        ctx_k, ctx_v, tail_k, tail_v = kv_cache
+        tail_pos = pos - ctx_k.shape[1]
+        o, tail_k, tail_v = decode_attention(
+            cfg, bp["attn"], q, k, v, ctx_k, ctx_v, tail_k, tail_v,
+            tail_pos)
+        new_kv = (tail_k, tail_v)
+    y = constrain(L.attention_out(bp["attn"], o),
+                  "batch", "block_seq", None)
+    x = constrain(x + y, "batch", "block_seq", None)
+
+    h = L.apply_norm(cfg, x, bp["mlp_norm"])
+    if cfg.moe is not None:
+        y, aux = L.moe_block(cfg, bp["moe"], h)
+    else:
+        y, aux = L.mlp_block(cfg, bp["mlp"], h), 0.0
+    y = constrain(y, "batch", "block_seq", None)
+    x = constrain(x + y, "batch", "block_seq", None)
+    x = L.bf16_grad_barrier(x)
+    return x, new_kv, aux
+
+
+def forward(cfg, params, tokens, *, collect_kv: bool = False):
+    """Full causal forward. tokens: (b, s) int32.
+
+    Returns (x_final, kv_stack | None, aux_sum). x_final is post-final-norm.
+    """
+    x = jnp.take(params["emb"], tokens, axis=0)
+    x = constrain(x, "batch", "block_seq", None)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, bp):
+        x, aux = carry
+        x, kv, a = _block(cfg, bp, x, positions)
+        ys = kv if collect_kv else None
+        return (x, aux + a), ys
+
+    body = _remat(cfg, body)
+    (x, aux), kvs = jax.lax.scan(body, (x, 0.0), params["blocks"],
+                                 unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    return x, kvs, aux
+
+
+def unembed(cfg, params, x):
+    w = params["emb"].T if cfg.tie_embeddings else params["unemb"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(logits, "batch", "seq", "act_vocab")
+
+
+def softmax_xent(cfg, params, x, labels, mask, *, chunk: int = 0):
+    """Chunked cross-entropy over the (sharded) vocab; O(chunk*V) memory."""
+    chunk = chunk or cfg.loss_chunk
+    b, s, d = x.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(tot, args):
+        xc, lc, mc = args
+        logits = unembed(cfg, params, xc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lc[..., None].astype(jnp.int32),
+                                  axis=-1)[..., 0]
+        return tot + jnp.sum((lse - lab) * mc), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ls, ms))
+    return tot
+
+
+def loss_fn(cfg, params, batch):
+    """batch: {"tokens": (b, s+1)} -> scalar mean xent (+ MoE aux)."""
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    x, _, aux = forward(cfg, params, inp)
+    tot = softmax_xent(cfg, params, x, labels, mask)
+    loss = tot / jnp.maximum(mask.sum(), 1.0)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_coef * aux / cfg.num_layers
+    return loss
+
+
+def prefill(cfg, params, tokens):
+    """Returns (last-position logits (b, v), kv cache stack (L,b,s,hkv,hd) x2)."""
+    x, kvs, _ = forward(cfg, params, tokens, collect_kv=True)
+    logits = unembed(cfg, params, x[:, -1:, :])[:, 0, :]
+    return logits, {"k": kvs[0], "v": kvs[1]}
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    """capacity = context length (read-only, seq-shardable); newly decoded
+    tokens live in the replicated DECODE_TAIL buffer."""
+    shape = (cfg.num_layers, batch, capacity, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    tail = (cfg.num_layers, batch, DECODE_TAIL, cfg.num_kv_heads,
+            cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "tail_k": jnp.zeros(tail, dtype),
+            "tail_v": jnp.zeros(tail, dtype)}
+
+
+def cache_axes(cfg):
+    ax = ("layers", "batch", "kv_seq", "act_kv", None)
+    tl = ("layers", "batch", None, "act_kv", None)
+    return {"k": ax, "v": ax, "tail_k": tl, "tail_v": tl}
+
+
+def decode_step(cfg, params, cache, token, pos):
+    """One decode step (serve_step). token: (b,) int32; pos: scalar int32
+    global position (pos >= context capacity; the new token is written to
+    the tail buffer). Returns (logits, cache)."""
+    x = jnp.take(params["emb"], token[:, None], axis=0)      # (b, 1, d)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+
+    def body(carry, xs):
+        x, tail_k, tail_v, l = carry
+        bp, ctx_k, ctx_v = xs
+        tk_l = jax.lax.dynamic_index_in_dim(tail_k, l, 0, keepdims=False)
+        tv_l = jax.lax.dynamic_index_in_dim(tail_v, l, 0, keepdims=False)
+        x, (nk, nv), _ = _block(cfg, bp, x, positions,
+                                kv_cache=(ctx_k, ctx_v, tk_l, tv_l),
+                                pos=pos)
+        tail_k = jax.lax.dynamic_update_index_in_dim(tail_k, nk, l, 0)
+        tail_v = jax.lax.dynamic_update_index_in_dim(tail_v, nv, l, 0)
+        return (x, tail_k, tail_v, l + 1), None
+
+    body = _remat(cfg, body)
+    (x, tk, tv, _), _ = jax.lax.scan(
+        body, (x, cache["tail_k"], cache["tail_v"], jnp.int32(0)),
+        (params["blocks"], cache["k"], cache["v"]),
+        unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params, x)[:, 0, :]
+    return logits, dict(cache, tail_k=tk, tail_v=tv)

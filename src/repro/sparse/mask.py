@@ -1,0 +1,88 @@
+"""Block importance estimation -> sparse block lists (SpargeAttention-style,
+paper §IV-C: "active blocks ... account for 98% of the total attention
+mass").
+
+Mean-pooled q/k block representatives score every (q_block, kv_block)
+pair; per q row, blocks are kept in descending-score order until their
+(softmax-normalized) cumulative mass reaches `mass`; the diagonal (local)
+block and block 0 (attention sink) are always kept. Output is the padded
+index-list format the Pallas kernel consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pool_blocks(x: jax.Array, block: int) -> jax.Array:
+    """(bh, s, d) -> (bh, s//block, d) mean pool."""
+    bh, s, d = x.shape
+    return x.reshape(bh, s // block, block, d).mean(axis=2)
+
+
+def block_scores(q, k, *, q_block: int, kv_block: int,
+                 causal: bool = True) -> jax.Array:
+    """(bh, n_qb, n_kb) pooled attention scores; invalid blocks -inf."""
+    pq = pool_blocks(q, q_block).astype(jnp.float32)
+    pk = pool_blocks(k, kv_block).astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", pq, pk) * (q.shape[-1] ** -0.5)
+    if causal:
+        n_qb, n_kb = s.shape[1], s.shape[2]
+        # block (qb, kb) is causal-valid if its first q row can see the
+        # block's first kv position: qb*q_block + q_block-1 >= kb*kv_block
+        qend = (jnp.arange(n_qb) + 1) * q_block - 1
+        kstart = jnp.arange(n_kb) * kv_block
+        valid = qend[:, None] >= kstart[None, :]
+        s = jnp.where(valid[None], s, -jnp.inf)
+    return s
+
+
+def select_blocks(scores: jax.Array, *, mass: float = 0.98,
+                  always_keep_diag: bool = True, q_block: int = 128,
+                  kv_block: int = 128) -> tuple[jax.Array, jax.Array]:
+    """scores: (bh, n_qb, n_kb) -> (block_idx, block_cnt) padded lists.
+
+    Keeps the top blocks whose softmax mass reaches `mass` per row.
+    """
+    bh, n_qb, n_kb = scores.shape
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isfinite(scores), p, 0.0)
+
+    if always_keep_diag:
+        diag = jnp.minimum((jnp.arange(n_qb) * q_block) // kv_block, n_kb - 1)
+        boost = jax.nn.one_hot(diag, n_kb)[None] \
+            + jax.nn.one_hot(jnp.zeros(n_qb, jnp.int32), n_kb)[None]
+        p = p + boost                                  # force to the front
+
+    order = jnp.argsort(-p, axis=-1)                   # (bh, n_qb, n_kb)
+    p_sorted = jnp.take_along_axis(p, order, axis=-1)
+    denom = jnp.maximum(p_sorted.sum(-1, keepdims=True), 1e-9)
+    cum = jnp.cumsum(p_sorted, axis=-1) / denom
+    # keep k blocks where the mass BEFORE them is < mass and score > 0
+    before = jnp.concatenate([jnp.zeros_like(cum[..., :1]),
+                              cum[..., :-1]], axis=-1)
+    keep = (before < mass) & (p_sorted > 0)
+    cnt = keep.sum(-1).astype(jnp.int32)
+    max_nnz = int(n_kb)
+    idx = jnp.where(keep, order, 0).astype(jnp.int32)
+    return idx, cnt
+
+
+def trim_nnz(block_idx: np.ndarray, block_cnt: np.ndarray,
+             multiple: int = 1):
+    """Host-side: shrink the padded nnz dimension to max(cnt)."""
+    mx = int(max(int(np.max(block_cnt)), 1))
+    mx = ((mx + multiple - 1) // multiple) * multiple
+    return np.asarray(block_idx)[..., :mx], np.asarray(block_cnt)
+
+
+def active_block_fraction(block_cnt: jax.Array, n_kb: int,
+                          causal: bool = True) -> float:
+    """Mean density vs the causal-valid block count (diagnostics)."""
+    n_qb = block_cnt.shape[1]
+    if causal:
+        valid = np.minimum(np.arange(1, n_qb + 1) * (128 // 128), n_kb)
+        valid = np.maximum(valid, 1)
+        return float(np.mean(np.asarray(block_cnt) / valid[None, :]))
+    return float(np.mean(np.asarray(block_cnt) / n_kb))

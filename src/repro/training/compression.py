@@ -1,0 +1,53 @@
+"""Gradient compression for the data-parallel all-reduce: int8 quantized
+gradients with error feedback (EF-SGD style). At 1000+ nodes the DP
+all-reduce is DCN-bound; int8 cuts wire bytes 4x vs fp32 (2x vs bf16) at
+negligible quality cost when the residual is fed back.
+
+Used via shard_map over the data axes: local grads are quantized, psum'd
+in int32, dequantized; the quantization residual is carried in the
+optimizer state and added to the next step's gradient.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(g):
+    a = jnp.max(jnp.abs(g)) + 1e-12
+    scale = a / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, error_state, data_axes):
+    """Inside shard_map: per-leaf int8 quantize -> psum -> dequant, with
+    error feedback. Returns (mean grads, new error state)."""
+    n = jax.lax.psum(1, data_axes)
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        # shared scale across the group so the int32 reduction is exact
+        a = jnp.max(jnp.abs(gf)) + 1e-12
+        scale = jax.lax.pmax(a / 127.0, data_axes)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        total = jax.lax.psum(q.astype(jnp.int32), data_axes)
+        avg = total.astype(jnp.float32) * scale / n
+        new_e = gf - q * scale
+        return avg.astype(g.dtype), new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_e = jax.tree.unflatten(tree, [o[1] for o in out])
+    return new_g, new_e
+
+
+def init_error_state(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,93 @@
+"""AdamW + LR schedules, pure-pytree implementation (no optax dependency).
+
+Moment dtype is configurable per model (fp32 default; bf16 for the 235B MoE
+to fit v5e HBM — see DESIGN.md §4 dtype policy).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jax.Array
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * w * (floor + (1 - floor) * cos)
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), gn
+
+
+class AdamW:
+    def __init__(self, tcfg, moment_dtype: str = "float32"):
+        self.cfg = tcfg
+        self.sched = warmup_cosine(tcfg.learning_rate, tcfg.warmup_steps,
+                                   tcfg.total_steps)
+        self.moment_dtype = jnp.dtype(moment_dtype)
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def abstract_state(self, abstract_params) -> AdamWState:
+        zeros = lambda p: jax.ShapeDtypeStruct(p.shape, self.moment_dtype)
+        return AdamWState(m=jax.tree.map(zeros, abstract_params),
+                          v=jax.tree.map(zeros, abstract_params),
+                          count=jax.ShapeDtypeStruct((), jnp.int32))
+
+    def state_pspecs(self, param_pspecs):
+        from jax.sharding import PartitionSpec as P
+        return AdamWState(m=param_pspecs, v=param_pspecs, count=P())
+
+    def update(self, grads, state: AdamWState, params):
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, c.grad_clip)
+        count = state.count + 1
+        b1, b2 = c.b1, c.b2
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        lr = self.sched(count)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+            step = (mf / bc1) / (jnp.sqrt(vf / bc2) + c.eps)
+            step = step + c.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return (new_p.astype(p.dtype), mf.astype(m.dtype),
+                    vf.astype(v.dtype))
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamWState(new_m, new_v, count), {
+            "grad_norm": gnorm, "lr": lr}

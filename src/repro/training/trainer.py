@@ -1,0 +1,158 @@
+"""Train-step builder: loss -> grads (optionally microbatched / compressed)
+-> AdamW update, with sharding-rules context and donation, plus a
+supervised training driver with fault injection, checkpoint/restart and
+deterministic step-indexed data (see launch/train.py for the CLI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed.sharding import Rules, use_rules
+from repro.models.api import Model
+from repro.training.optimizer import AdamW, AdamWState
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: AdamWState
+    step: int
+
+
+def build_train_step(model: Model, tcfg: TrainConfig,
+                     rules: Optional[Rules] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    opt = AdamW(tcfg, model.cfg.moment_dtype)
+
+    def loss_fn(params, batch):
+        with use_rules(rules):
+            return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+            batches = jax.tree.map(reshape, batch)
+
+            def acc_fn(carry, mb_batch):
+                loss_sum, g_sum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb_batch)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (loss_sum + l, g_sum), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0), zeros),
+                                            batches)
+            loss = loss / mb
+            grads = jax.tree.map(lambda gg: (gg / mb), grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_p, new_opt, metrics = opt.update(grads, opt_state, params)
+        return new_p, new_opt, dict(metrics, loss=loss)
+
+    return train_step, opt
+
+
+def jit_train_step(model: Model, tcfg: TrainConfig, rules: Rules,
+                   batch_pspecs):
+    """Fully-sharded jitted train step (what dryrun lowers and train runs)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = rules.mesh
+    step_fn, opt = build_train_step(model, tcfg, rules)
+    pspecs = model.param_pspecs(rules)
+    opt_specs = opt.state_pspecs(pspecs)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    metric_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+    return jax.jit(
+        step_fn,
+        in_shardings=(ns(pspecs), ns(opt_specs), ns(batch_pspecs)),
+        out_shardings=(ns(pspecs), ns(opt_specs), ns(metric_specs)),
+        donate_argnums=(0, 1)), opt
+
+
+class FaultInjector:
+    """Deterministic simulated node failures for fault-tolerance tests."""
+
+    def __init__(self, fail_steps: tuple[int, ...] = ()):
+        self.fail_steps = set(fail_steps)
+        self.fired: set[int] = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_steps and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+def data_batch(cfg: ModelConfig, tcfg: TrainConfig, step: int,
+               batch: int, seq: int) -> dict:
+    """Deterministic step-indexed batch: restart-safe without data-loader
+    state (the PRNG key is a pure function of (seed, step))."""
+    from repro.data.workloads import lm_token_batch
+    rng = np.random.default_rng((tcfg.seed, step))
+    if cfg.family == "encdec":
+        frames = rng.normal(size=(batch, seq, cfg.d_model)) * 0.1
+        dec = rng.integers(0, cfg.vocab_size,
+                           size=(batch, cfg.dec_len + 1))
+        return {"frames": jnp.asarray(frames, jnp.bfloat16),
+                "dec_tokens": jnp.asarray(dec, jnp.int32)}
+    toks = lm_token_batch(rng, cfg.vocab_size, batch, seq + 1)
+    return {"tokens": jnp.asarray(toks, jnp.int32)}
+
+
+def train_loop(model: Model, tcfg: TrainConfig, *, batch: int, seq: int,
+               steps: int, rules: Optional[Rules] = None,
+               ckpt_manager=None, fault: Optional[FaultInjector] = None,
+               log_every: int = 10, resume: bool = True) -> dict:
+    """Supervised loop: restores from the last checkpoint if present,
+    injects faults if configured (caller catches + restarts), checkpoints
+    periodically. Returns final metrics + loss history."""
+    step_fn, opt = build_train_step(model, tcfg, rules)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    start = 0
+    params = model.init(jax.random.PRNGKey(tcfg.seed))
+    opt_state = opt.init(params)
+    if ckpt_manager is not None and resume:
+        restored = ckpt_manager.restore_latest(
+            like={"params": params, "opt": opt_state})
+        if restored is not None:
+            state, start = restored
+            params, opt_state = state["params"], state["opt"]
+
+    history = []
+    t0 = time.time()
+    for step in range(start, steps):
+        if fault is not None:
+            fault.maybe_fail(step)
+        batch_data = data_batch(model.cfg, tcfg, step, batch, seq)
+        params, opt_state, metrics = step_fn(params, opt_state, batch_data)
+        if (step + 1) % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+        if ckpt_manager is not None and \
+                (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt_manager.save({"params": params, "opt": opt_state},
+                              step + 1)
+    if ckpt_manager is not None:
+        ckpt_manager.save({"params": params, "opt": opt_state}, steps)
+        ckpt_manager.wait()
+    return {
+        "history": history,
+        "final_loss": history[-1][1] if history else None,
+        "steps": steps,
+        "wall_s": time.time() - t0,
+        "params": params,
+        "opt": opt_state,
+    }

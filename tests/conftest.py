@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests run on the single real CPU device; the 512-device dry-run sets its
+# own XLA_FLAGS in its subprocess (never globally — see system docs)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

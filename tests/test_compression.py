@@ -1,0 +1,68 @@
+"""Huffman codec + quantization properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression import huffman as H
+from repro.compression.quantize import (BITRATE_LEVELS, layerwise_bits,
+                                        quant_error, quantize)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 20000), st.integers(2, 6), st.integers(1, 64),
+       st.floats(0.2, 6.0))
+def test_huffman_roundtrip(n, bits, streams, skew):
+    rng = np.random.default_rng(n * 7 + bits)
+    alpha = 1 << bits
+    # skewed multinomial like quantized KV
+    p = np.exp(-skew * np.abs(np.arange(alpha) - alpha / 2) / alpha)
+    p /= p.sum()
+    x = rng.choice(alpha, size=n, p=p).astype(np.uint16)
+    enc = H.encode(x, alpha, n_streams=streams)
+    dec = H.decode(enc)
+    assert np.array_equal(dec, x)
+
+
+def test_huffman_near_entropy(rng):
+    x = np.clip(rng.normal(16, 3, 200_000), 0, 31).astype(np.uint16)
+    enc = H.encode(x, 32, n_streams=256)
+    ent = H.entropy_bits(x, 32)
+    actual = enc.payload_bytes() * 8 / len(x)
+    # within 8% of the entropy bound at this scale
+    assert actual < ent * 1.08 + 0.1
+
+
+def test_huffman_constant_sequence():
+    x = np.full(5000, 7, np.uint16)
+    enc = H.encode(x, 32, n_streams=16)
+    assert np.array_equal(H.decode(enc), x)
+    assert enc.payload_bytes() * 8 / len(x) < 1.5  # ~1 bit/sym + overhead
+
+
+def test_huffman_empty():
+    enc = H.encode(np.zeros(0, np.uint16), 32)
+    assert len(H.decode(enc)) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.sampled_from([16, 32, 64, 128]))
+def test_quantize_error_bound(bits, group):
+    rng = np.random.default_rng(bits * group)
+    x = rng.normal(size=(64, 64)).astype(np.float32)
+    qt = quantize(x, bits, group)
+    from repro.compression.quantize import dequantize
+    xr = dequantize(qt)
+    # max error <= half step of the worst group
+    assert np.abs(xr - x).max() <= qt.scales.max() / 2 + 1e-6
+    # monotone: more bits -> lower error
+    if bits < 8:
+        assert quant_error(x, bits + 1, group) <= \
+            quant_error(x, bits, group) + 1e-9
+
+
+def test_layerwise_bits_ladder():
+    for lvl in range(len(BITRATE_LEVELS)):
+        for layer in (0, 10, 30):
+            bk = layerwise_bits(lvl, layer, 32, is_key=True)
+            bv = layerwise_bits(lvl, layer, 32, is_key=False)
+            assert 2 <= bv <= bk <= 8  # keys get >= bits than values

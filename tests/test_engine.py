@@ -1,0 +1,87 @@
+"""Discrete-event engine + runtime controller behaviour."""
+import numpy as np
+import pytest
+
+from repro.configs import SparKVConfig, get_config
+from repro.core import baselines as B
+from repro.core.costs import NETWORKS, PROFILES, NetworkProfile
+from repro.data.workloads import DATASETS, synthesize
+
+CFG = get_config("sparkv-qwen3-4b")
+SP = SparKVConfig()
+WL = synthesize(CFG, 6_144, DATASETS["triviaqa"])
+NET = NETWORKS["campus-wifi"]
+
+
+def test_all_pipelines_complete_all_chunks():
+    for name, fn in B.PIPELINES.items():
+        r = fn(CFG, WL, "jetson-orin", NET, SP, seed=0)
+        e = r.engine
+        assert e.n_streamed + e.n_computed == WL.n_t * WL.n_l * WL.n_h, name
+        assert r.ttft_s > 0 and r.energy_j > 0
+
+
+def test_hybrid_not_worse_than_best_single_path():
+    r_sp = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, seed=0)
+    r_lo = B.run_local_prefill(CFG, WL, "jetson-orin", NET, SP, seed=0)
+    r_ki = B.run_kivi(CFG, WL, "jetson-orin", NET, SP,
+                      bits=SP.quant_bits, seed=0)
+    best_single = min(r_lo.ttft_s, r_ki.ttft_s)
+    assert r_sp.ttft_s <= best_single * 1.10  # within noise of dominating
+
+
+def test_ttft_above_physical_lower_bound():
+    """TTFT >= total work / combined service rate (perfect overlap)."""
+    r = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, seed=1)
+    e = r.engine
+    stream_all = sum(
+        b / NET.mean_bw for b in [WL.chunk_bytes.sum()])
+    comp_all = B.run_local_prefill(CFG, WL, "jetson-orin", NET, SP,
+                                   seed=1).engine.compute_busy_s
+    perfect = 1.0 / (1.0 / max(stream_all, 1e-9)
+                     + 1.0 / max(comp_all, 1e-9))
+    assert r.ttft_s >= perfect * 0.9
+
+
+def test_controller_migrates_under_bandwidth_drop():
+    bad = NetworkProfile("bad", 120e6 / 8, 80e6 / 8)
+    r_adapt = B.run_sparkv(CFG, WL, "jetson-orin", bad, SP, seed=0)
+    r_static = B.run_sparkv(CFG, WL, "jetson-orin", bad, SP, seed=0,
+                            adapt=False)
+    assert r_adapt.extras["migrations"] > 0
+    assert r_adapt.ttft_s <= r_static.ttft_s * 1.05
+
+
+def test_contention_shifts_work_to_streaming():
+    r0 = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, util=0.0, seed=0)
+    r8 = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, util=0.8, seed=0)
+    # heavy contention -> fewer chunks computed locally
+    assert r8.engine.n_computed <= r0.engine.n_computed
+    # and energy under contention stays bounded vs local prefill
+    r_local = B.run_local_prefill(CFG, WL, "jetson-orin", NET, SP,
+                                  util=0.8, seed=0)
+    assert r8.energy_j < r_local.energy_j
+
+
+def test_quality_ordering():
+    r_sp = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, seed=0)
+    r_cg = B.run_cachegen(CFG, WL, "jetson-orin", NET, SP, seed=0)
+    r_lo = B.run_local_prefill(CFG, WL, "jetson-orin", NET, SP, seed=0)
+    assert r_lo.quality == 1.0
+    # mixing exact computed chunks lifts SparKV above pure streaming at
+    # the same bit width (CacheGen may exceed it only by picking 8-bit)
+    assert r_sp.quality >= B.QUALITY_OF_BITS[SP.quant_bits]
+    assert r_cg.quality >= 0.9  # quality bar respected by the ladder
+
+
+def test_energy_breakdown_consistency():
+    r = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, seed=0)
+    e = r.engine.energy
+    assert abs(e["total_j"] - (e["compute_j"] + e["nic_j"] + e["idle_j"])) \
+        < 1e-6
+
+
+def test_deterministic_given_seed():
+    a = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, seed=3).ttft_s
+    b = B.run_sparkv(CFG, WL, "jetson-orin", NET, SP, seed=3).ttft_s
+    assert a == b

@@ -1,0 +1,141 @@
+"""Pallas kernel validation (interpret=True) against pure-jnp oracles:
+shape/dtype sweeps + hypothesis-driven randomized cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression.quantize import dequantize, quantize
+from repro.kernels.block_sparse_attn.kernel import block_sparse_attention
+from repro.kernels.block_sparse_attn.ref import block_sparse_attention_ref
+from repro.kernels.decode_attn.kernel import decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+from repro.kernels.kv_dequant.kernel import kv_dequant
+from repro.kernels.kv_dequant.ref import kv_dequant_ref
+from repro.kernels.kv_dequant.ops import dequantize_chunk
+from repro.sparse.mask import block_scores, select_blocks
+
+KEYS = jax.random.split(jax.random.PRNGKey(7), 8)
+
+
+def _mask_for(q, k, mass, qb, kb, causal=True):
+    sc = block_scores(q, k, q_block=qb, kv_block=kb, causal=causal)
+    return select_blocks(sc, mass=mass, q_block=qb, kv_block=kb)
+
+
+@pytest.mark.parametrize("bh,s,d,dtype", [
+    (4, 512, 64, jnp.float32),
+    (2, 1024, 128, jnp.float32),
+    (2, 256, 128, jnp.bfloat16),
+    (6, 384, 64, jnp.float32),
+])
+def test_block_sparse_attention_vs_ref(bh, s, d, dtype):
+    q = jax.random.normal(KEYS[0], (bh, s, d), dtype)
+    k = jax.random.normal(KEYS[1], (bh, s, d), dtype)
+    v = jax.random.normal(KEYS[2], (bh, s, d), dtype)
+    qb = kb = 128
+    idx, cnt = _mask_for(q, k, 0.9, qb, kb)
+    out = block_sparse_attention(q, k, v, idx, cnt, causal=True,
+                                 q_block=qb, kv_block=kb, interpret=True)
+    ref = block_sparse_attention_ref(q, k, v, idx, cnt, causal=True,
+                                     q_block=qb, kv_block=kb)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("g", [2, 4, 8])
+def test_block_sparse_attention_gqa(g):
+    bh_kv, s, d = 2, 256, 64
+    q = jax.random.normal(KEYS[3], (bh_kv * g, s, d), jnp.float32)
+    k = jax.random.normal(KEYS[4], (bh_kv, s, d), jnp.float32)
+    v = jax.random.normal(KEYS[5], (bh_kv, s, d), jnp.float32)
+    kr = jnp.repeat(k, g, axis=0)
+    vr = jnp.repeat(v, g, axis=0)
+    idx, cnt = _mask_for(q, kr, 0.95, 128, 128)
+    out = block_sparse_attention(q, k, v, idx, cnt, causal=True,
+                                 kv_group=g, interpret=True)
+    ref = block_sparse_attention_ref(q, kr, vr, idx, cnt, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_block_sparse_full_mask_equals_dense():
+    """With every block active, the kernel reduces to causal attention."""
+    bh, s, d = 2, 256, 64
+    q = jax.random.normal(KEYS[0], (bh, s, d), jnp.float32)
+    k = jax.random.normal(KEYS[1], (bh, s, d), jnp.float32)
+    v = jax.random.normal(KEYS[2], (bh, s, d), jnp.float32)
+    n_b = s // 128
+    idx = jnp.broadcast_to(jnp.arange(n_b), (bh, n_b, n_b)).astype(jnp.int32)
+    cnt = jnp.broadcast_to(jnp.arange(1, n_b + 1), (bh, n_b)).astype(jnp.int32)
+    out = block_sparse_attention(q, k, v, idx, cnt, causal=True,
+                                 interpret=True)
+    # dense causal oracle
+    sc = jnp.einsum("bqd,bkd->bqk", q, k) * d ** -0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask, sc, -jnp.inf)
+    ref = jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(sc, axis=-1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,skv,d,klen,blk", [
+    (2, 8, 2, 512, 64, 400, 256),
+    (1, 4, 4, 1024, 128, 1024, 256),
+    (3, 16, 2, 768, 128, 700, 128),
+    (2, 8, 1, 512, 256, 333, 512),
+])
+def test_decode_attention_vs_ref(b, hq, hkv, skv, d, klen, blk):
+    q = jax.random.normal(KEYS[0], (b, hq, d), jnp.float32)
+    k = jax.random.normal(KEYS[1], (b, skv, hkv, d), jnp.float32)
+    v = jax.random.normal(KEYS[2], (b, skv, hkv, d), jnp.float32)
+    out = decode_attention(q, k, v, klen, kv_block=blk, interpret=True)
+    ref = decode_attention_ref(q, k, v, klen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("n,width,group,bits", [
+    (64, 128, 64, 5), (100, 512, 64, 4), (7, 256, 128, 8), (1024, 128, 32, 3),
+])
+def test_kv_dequant_vs_ref(n, width, group, bits, rng):
+    codes = rng.integers(0, 1 << bits, size=(n, width)).astype(np.uint8)
+    g = width // group
+    scales = rng.uniform(0.01, 0.2, (n, g)).astype(np.float32)
+    zeros = rng.normal(size=(n, g)).astype(np.float32)
+    out = kv_dequant(jnp.asarray(codes), jnp.asarray(scales),
+                     jnp.asarray(zeros), group=group, interpret=True,
+                     out_dtype=jnp.float32)
+    ref = kv_dequant_ref(jnp.asarray(codes), jnp.asarray(scales),
+                         jnp.asarray(zeros), group=group,
+                         out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(50, 4000), st.integers(2, 8), st.sampled_from([32, 64]))
+def test_dequant_roundtrip_hypothesis(n_vals, bits, group):
+    rng = np.random.default_rng(n_vals * 31 + bits)
+    x = rng.normal(size=n_vals).astype(np.float32)
+    qt = quantize(x, bits, group)
+    host = dequantize(qt)
+    dev = np.asarray(dequantize_chunk(qt, out_dtype=jnp.float32))
+    np.testing.assert_allclose(dev, host, atol=1e-5)
+    # quantization error bounded by half a step per group
+    assert np.abs(host - x).max() <= qt.scales.max() * 0.51 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(128, 512), st.booleans())
+def test_block_sparse_hypothesis(bh, s, causal):
+    s = (s // 128) * 128
+    if s == 0:
+        return
+    kk = jax.random.split(jax.random.PRNGKey(s * bh), 3)
+    q = jax.random.normal(kk[0], (bh, s, 64), jnp.float32)
+    k = jax.random.normal(kk[1], (bh, s, 64), jnp.float32)
+    v = jax.random.normal(kk[2], (bh, s, 64), jnp.float32)
+    idx, cnt = _mask_for(q, k, 0.85, 128, 128, causal=causal)
+    out = block_sparse_attention(q, k, v, idx, cnt, causal=causal,
+                                 interpret=True)
+    ref = block_sparse_attention_ref(q, k, v, idx, cnt, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
