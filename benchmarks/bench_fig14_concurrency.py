@@ -1,6 +1,15 @@
 """Fig. 14: concurrent requests — TTFT and energy/request as edge compute
 is shared (device utilization rises); SparKV sheds compute-path work to
-streaming when the device is contended."""
+streaming when the device is contended.
+
+Two utilization sources:
+
+  - static (default, paper-figure parity): each level is a hand-set
+    `util` scalar fed to an isolated single-request engine;
+  - closed-loop (`closed_loop=True`): each level is N actually-concurrent
+    requests in the serving cluster — utilization emerges from in-flight
+    compute chunks and the shared link, not from a dial.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -12,38 +21,80 @@ from repro.data.workloads import DATASETS, synthesize
 
 from benchmarks.common import save, table
 
+POLICIES = ["sparkv", "strong_hybrid", "local_prefill"]
 
-def run(quick: bool = False):
-    cfg = get_config("sparkv-qwen3-4b")
-    spcfg = SparKVConfig()
-    wl = synthesize(cfg, 12_288, DATASETS["longchat"])
-    net = NETWORKS["campus-wifi"]
+
+def _row(label, ttft, energy):
+    return {
+        "concurrency": label,
+        "sparkv_ttft": ttft["sparkv"],
+        "hybrid_ttft": ttft["strong_hybrid"],
+        "local_ttft": ttft["local_prefill"],
+        "sparkv_J": energy["sparkv"],
+        "hybrid_J": energy["strong_hybrid"],
+        "local_J": energy["local_prefill"],
+        "vs_hybrid_x": ttft["strong_hybrid"] / ttft["sparkv"],
+        "vs_local_x": ttft["local_prefill"] / ttft["sparkv"],
+    }
+
+
+def _static_rows(cfg, spcfg, wl, net, levels):
     rows = []
-    levels = [0.0, 0.3, 0.6, 0.8]
-    for util in levels[:2] if quick else levels:
-        agg = {}
-        for pol in ["sparkv", "strong_hybrid", "local_prefill"]:
+    for util in levels:
+        ttft, energy = {}, {}
+        for pol in POLICIES:
             r = B.PIPELINES[pol](cfg, wl, "jetson-orin", net, spcfg,
                                  util=util, seed=0)
-            agg[pol] = r
-        rows.append({
-            "concurrency_util": util,
-            "sparkv_ttft": agg["sparkv"].ttft_s,
-            "hybrid_ttft": agg["strong_hybrid"].ttft_s,
-            "local_ttft": agg["local_prefill"].ttft_s,
-            "sparkv_J": agg["sparkv"].energy_j,
-            "hybrid_J": agg["strong_hybrid"].energy_j,
-            "local_J": agg["local_prefill"].energy_j,
-            "vs_hybrid_x": agg["strong_hybrid"].ttft_s
-            / agg["sparkv"].ttft_s,
-            "vs_local_x": agg["local_prefill"].ttft_s
-            / agg["sparkv"].ttft_s,
-        })
-    print(table(rows, list(rows[0].keys()),
-                title="\n[Fig 14] concurrent-request contention"))
-    save("fig14_concurrency", {"rows": rows})
+            ttft[pol], energy[pol] = r.ttft_s, r.energy_j
+        rows.append(_row(util, ttft, energy))
+    return rows
+
+
+def _closed_loop_rows(cfg, context_len, levels_n):
+    """Utilization from N genuinely-concurrent requests in the cluster."""
+    from repro.serving.cluster import RequestSpec, ServingCluster
+    spcfg = SparKVConfig(scheduler_mode="engine")
+    rows = []
+    for n in levels_n:
+        ttft, energy = {}, {}
+        for pol in POLICIES:
+            specs = [RequestSpec(arrival_s=0.0, context_len=context_len,
+                                 policy=pol, seed=i) for i in range(n)]
+            rep = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
+                                 max_concurrency=n, closed_loop=True
+                                 ).run(specs)
+            s = rep.summary()
+            ttft[pol] = s["ttft_mean_s"]
+            energy[pol] = s["energy_per_req_j"]
+        rows.append(_row(f"N={n}", ttft, energy))
+    return rows
+
+
+def run(quick: bool = False, closed_loop: bool = False):
+    cfg = get_config("sparkv-qwen3-4b")
+    net = NETWORKS["campus-wifi"]
+    rows = []
+    if closed_loop:
+        levels_n = [1, 2] if quick else [1, 2, 4, 8]
+        rows = _closed_loop_rows(cfg, 4096 if quick else 8192, levels_n)
+        title = "\n[Fig 14] concurrent-request contention (closed-loop N)"
+    else:
+        spcfg = SparKVConfig()
+        wl = synthesize(cfg, 12_288, DATASETS["longchat"])
+        levels = [0.0, 0.3, 0.6, 0.8]
+        rows = _static_rows(cfg, spcfg, wl, net,
+                            levels[:2] if quick else levels)
+        title = "\n[Fig 14] concurrent-request contention"
+    print(table(rows, list(rows[0].keys()), title=title))
+    save("fig14_concurrency" + ("_closed_loop" if closed_loop else ""),
+         {"rows": rows})
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--closed-loop", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick, closed_loop=a.closed_loop)

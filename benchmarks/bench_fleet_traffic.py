@@ -1,0 +1,94 @@
+"""Fleet traffic: N concurrent requests under Poisson/bursty arrivals.
+
+Runs the multi-request serving cluster (shared-link bandwidth arbiter +
+closed-loop compute contention) for each policy and reports fleet
+metrics: p50/p99 TTFT, goodput, energy per request, migrations. Also
+checks the two regressions the subsystem exists to express:
+
+  - link contention: aggregate per-request stream time under concurrency
+    exceeds the single-request stream time;
+  - closed-loop contention: migration counts differ from the static-util
+    path (the controller reacts to *actual* in-flight compute).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import SparKVConfig, get_config
+from repro.serving.cluster import ServingCluster
+from repro.serving.traffic import TrafficProfile, generate_trace
+
+from benchmarks.common import save, table
+
+POLICIES = ["sparkv", "strong_hybrid", "local_prefill"]
+
+
+def run(quick: bool = False):
+    cfg = get_config("sparkv-qwen3-4b")
+    spcfg = SparKVConfig(scheduler_mode="engine")
+    n_req = 8 if quick else 16
+    rate = 1.0 if quick else 0.8
+    max_ctx = 4096 if quick else 8192
+    rows = []
+    contention = {}
+    for policy in POLICIES:
+        prof = TrafficProfile(rate_rps=rate, arrival="poisson",
+                              context_mix=(("longchat", 1.0),),
+                              policy_mix=((policy, 1.0),),
+                              max_context=max_ctx)
+        specs = generate_trace(prof, n_req, seed=7)
+        cluster = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
+                                 max_concurrency=8, closed_loop=True)
+        rep = cluster.run(specs)
+        s = rep.summary()
+        # single-request baseline on the same trace for the contention check
+        solo = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
+                              max_concurrency=8, closed_loop=True
+                              ).run(specs[:1])
+        per_req_stream = s["stream_busy_total_s"] / max(s["n_done"], 1)
+        contention[policy] = {
+            "fleet_stream_per_req_s": per_req_stream,
+            "solo_stream_s": solo.records[0].stream_busy_s,
+        }
+        rows.append({
+            "policy": policy,
+            "n": s["n_done"],
+            "ttft_p50_s": s["ttft_p50_s"],
+            "ttft_p99_s": s["ttft_p99_s"],
+            "goodput_rps": s["goodput_rps"],
+            "J_per_req": s["energy_per_req_j"],
+            "migrations": s["migrations_total"],
+            "queue_mean_s": s["queue_mean_s"],
+        })
+    print(table(rows, list(rows[0].keys()),
+                title=f"\n[fleet] {n_req} Poisson requests, shared link + "
+                      "closed-loop contention"))
+
+    # closed-loop vs static-util migration comparison (sparkv only)
+    prof = TrafficProfile(rate_rps=rate, arrival="poisson",
+                          policy_mix=(("sparkv", 1.0),),
+                          max_context=max_ctx)
+    specs = generate_trace(prof, n_req, seed=7)
+    migr = {}
+    for mode, kw in [("closed_loop", dict(closed_loop=True)),
+                     ("static_util0", dict(closed_loop=False,
+                                           static_util=0.0))]:
+        rep = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
+                             max_concurrency=8, **kw).run(specs)
+        migr[mode] = rep.summary()["migrations_total"]
+    print(f"\nmigrations closed-loop={migr['closed_loop']} "
+          f"vs static util=0: {migr['static_util0']}")
+    for pol, c in contention.items():
+        print(f"stream-time {pol}: fleet/req {c['fleet_stream_per_req_s']:.3f}s"
+              f" vs solo {c['solo_stream_s']:.3f}s")
+
+    save("fleet_traffic", {"rows": rows, "contention": contention,
+                           "migrations": migr})
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -17,6 +17,7 @@ BENCHES = [
     ("fig9", "benchmarks.bench_fig9_overall"),
     ("fig13", "benchmarks.bench_fig13_interference"),
     ("fig14", "benchmarks.bench_fig14_concurrency"),
+    ("fleet", "benchmarks.bench_fleet_traffic"),
     ("fig15", "benchmarks.bench_fig15_context_scaling"),
     ("fig16", "benchmarks.bench_fig16_breakdown"),
     ("quality", "benchmarks.bench_quality_validation"),
@@ -46,6 +47,10 @@ def main():
             traceback.print_exc()
             results[name] = f"FAIL: {type(e).__name__}: {e}"
     print(f"\n=== benchmark summary ({time.time() - t_all:.0f}s) ===")
+    if not results:
+        known = ", ".join(name for name, _ in BENCHES)
+        raise SystemExit(f"no benchmarks matched --only={args.only}; "
+                         f"known: {known}")
     width = max(len(k) for k in results)
     failed = 0
     for k, v in results.items():

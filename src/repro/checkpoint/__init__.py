@@ -1,0 +1,1 @@
+"""Checkpointing: async save/restore of training state."""

@@ -1,0 +1,1 @@
+"""KV compression: group quantization + multi-stream Huffman coding."""

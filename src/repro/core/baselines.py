@@ -132,103 +132,133 @@ def _run_engine(cfg, grid, bytes_map, active_map, planner, schedule,
     return eng.run(schedule, context_len=context_len)
 
 
+@dataclasses.dataclass
+class RequestPlan:
+    """Everything the engine needs to execute one request under a given
+    policy — the planning half of a pipeline, without running it. Used by
+    the multi-request cluster (repro.serving.cluster), which drives many
+    plans on one shared clock instead of calling the closed run_* loops."""
+    policy: str
+    grid: ChunkGrid
+    bytes_map: dict
+    active_map: dict
+    planner: Planner
+    schedule: object
+    controller: Optional[RuntimeController]
+    quality_bits: int
+    context_len: int
+
+
+def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
+                net: NetworkProfile, spcfg: SparKVConfig, *,
+                util: float = 0.0, adapt: bool = True,
+                slo_s: float = 2.0, kivi_bits: int = 3) -> RequestPlan:
+    """Build the schedule/controller for `policy` without executing it."""
+    if policy not in PIPELINES:
+        raise KeyError(f"unknown policy {policy!r}; have {list(PIPELINES)}")
+    grid, bmap, amap = _engine_grid(cfg, wl, spcfg)
+    bits = spcfg.quant_bits
+    if policy == "cachegen":
+        from repro.compression.quantize import BITRATE_LEVELS
+        levels = [b for b in BITRATE_LEVELS if QUALITY_OF_BITS[b] >= 0.9]
+        bits = levels[0]
+        for b in levels:
+            scale = b / spcfg.quant_bits
+            bits = b
+            if sum(bmap.values()) * scale / net.mean_bw <= slo_s:
+                break
+        bmap = {c: v * bits / spcfg.quant_bits for c, v in bmap.items()}
+    elif policy == "kivi":
+        bits = kivi_bits
+        bmap = {c: v * bits / spcfg.quant_bits for c, v in bmap.items()}
+    planner = Planner.build(cfg, grid, bmap, amap, profile_name, net, spcfg,
+                            util=util)
+    controller = None
+    if policy == "sparkv":
+        schedule = sched.GreedyScheduler(
+            grid, planner.ts, planner.tc,
+            stage_budget_s=spcfg.stage_budget_s,
+            w_immediate=spcfg.w_immediate,
+            w_potential=spcfg.w_potential).run()
+        if adapt:
+            controller = RuntimeController(spcfg, net.mean_bw)
+    elif policy == "strong_hybrid":
+        schedule = sched.positional_hybrid(grid, planner.ts, planner.tc)
+    elif policy == "local_prefill":
+        schedule = sched.compute_only(grid, planner.ts, planner.tc)
+    else:                                   # cachegen / kivi: stream-only
+        schedule = sched.stream_only(grid, planner.ts, planner.tc)
+    return RequestPlan(policy=policy, grid=grid, bytes_map=bmap,
+                       active_map=amap, planner=planner, schedule=schedule,
+                       controller=controller, quality_bits=bits,
+                       context_len=wl.context_len)
+
+
 def _mixed_quality(res, bits: int) -> float:
     n = res.n_streamed + res.n_computed
     q_stream = QUALITY_OF_BITS[bits]
     return (res.n_computed * 1.0 + res.n_streamed * q_stream) / max(n, 1)
 
 
+def _run_plan(plan: RequestPlan, cfg, profile_name, net, spcfg, *,
+              util=0.0, seed=0) -> PipelineResult:
+    res = _run_engine(cfg, plan.grid, plan.bytes_map, plan.active_map,
+                      plan.planner, plan.schedule, profile_name, net, spcfg,
+                      util=util, controller=plan.controller, seed=seed,
+                      context_len=plan.context_len, bw_seed=seed + 991)
+    extras = {}
+    if plan.policy == "sparkv":
+        extras["migrations"] = res.n_migrations
+    elif plan.policy == "cachegen":
+        extras["bits"] = plan.quality_bits
+    return PipelineResult(plan.policy, res.ttft_s, res.energy["total_j"],
+                          _mixed_quality(res, plan.quality_bits), res,
+                          extras)
+
+
 def run_sparkv(cfg, wl: WorkloadChunks, profile_name: str,
                net: NetworkProfile, spcfg: SparKVConfig, *, util=0.0,
                seed=0, adapt: bool = True) -> PipelineResult:
-    grid, bmap, amap = _engine_grid(cfg, wl, spcfg)
-    planner = Planner.build(cfg, grid, bmap, amap, profile_name, net, spcfg,
-                            util=util)
-    schedule = sched.GreedyScheduler(
-        grid, planner.ts, planner.tc, stage_budget_s=spcfg.stage_budget_s,
-        w_immediate=spcfg.w_immediate,
-        w_potential=spcfg.w_potential).run()
-    ctrl = RuntimeController(spcfg, net.mean_bw) if adapt else None
-    res = _run_engine(cfg, grid, bmap, amap, planner, schedule, profile_name,
-                      net, spcfg, util=util, controller=ctrl, seed=seed,
-                      context_len=wl.context_len, bw_seed=seed + 991)
-    return PipelineResult("sparkv", res.ttft_s, res.energy["total_j"],
-                          _mixed_quality(res, spcfg.quant_bits), res,
-                          {"migrations": res.n_migrations})
+    plan = plan_policy("sparkv", cfg, wl, profile_name, net, spcfg,
+                       util=util, adapt=adapt)
+    return _run_plan(plan, cfg, profile_name, net, spcfg, util=util,
+                     seed=seed)
 
 
 def run_strong_hybrid(cfg, wl, profile_name, net, spcfg, *, util=0.0,
                       seed=0) -> PipelineResult:
-    grid, bmap, amap = _engine_grid(cfg, wl, spcfg)
-    planner = Planner.build(cfg, grid, bmap, amap, profile_name, net, spcfg,
-                            util=util)
-    schedule = sched.positional_hybrid(grid, planner.ts, planner.tc)
-    res = _run_engine(cfg, grid, bmap, amap, planner, schedule, profile_name,
-                      net, spcfg, util=util, seed=seed,
-                      context_len=wl.context_len, bw_seed=seed + 991)
-    return PipelineResult("strong_hybrid", res.ttft_s,
-                          res.energy["total_j"],
-                          _mixed_quality(res, spcfg.quant_bits), res)
+    plan = plan_policy("strong_hybrid", cfg, wl, profile_name, net, spcfg,
+                       util=util)
+    return _run_plan(plan, cfg, profile_name, net, spcfg, util=util,
+                     seed=seed)
 
 
 def run_local_prefill(cfg, wl, profile_name, net, spcfg, *, util=0.0,
                       seed=0) -> PipelineResult:
-    grid, bmap, amap = _engine_grid(cfg, wl, spcfg)
-    planner = Planner.build(cfg, grid, bmap, amap, profile_name, net, spcfg,
-                            util=util)
-    schedule = sched.compute_only(grid, planner.ts, planner.tc)
-    res = _run_engine(cfg, grid, bmap, amap, planner, schedule, profile_name,
-                      net, spcfg, util=util, seed=seed,
-                      context_len=wl.context_len, bw_seed=seed + 991)
-    return PipelineResult("local_prefill", res.ttft_s,
-                          res.energy["total_j"], 1.0, res)
+    plan = plan_policy("local_prefill", cfg, wl, profile_name, net, spcfg,
+                       util=util)
+    return _run_plan(plan, cfg, profile_name, net, spcfg, util=util,
+                     seed=seed)
 
 
 def run_cachegen(cfg, wl, profile_name, net, spcfg, *, util=0.0, seed=0,
                  slo_s: float = 2.0) -> PipelineResult:
     """Stream-only with a bitrate ladder: pick the finest level whose
     projected delivery meets the SLO under profiled bandwidth."""
-    from repro.compression.quantize import BITRATE_LEVELS
-    grid, bmap, amap = _engine_grid(cfg, wl, spcfg)
-    base_bits = spcfg.quant_bits
-    # paper's comparisons hold response quality comparable (F1 >= 0.9):
-    # the ladder may not drop below that fidelity
-    levels = [b for b in BITRATE_LEVELS if QUALITY_OF_BITS[b] >= 0.9]
-    chosen = levels[0]
-    for bits in levels:                               # finest -> coarsest
-        scale = bits / base_bits
-        t_total = sum(bmap.values()) * scale / net.mean_bw
-        chosen = bits
-        if t_total <= slo_s:
-            break
-    scale = chosen / base_bits
-    bmap2 = {c: b * scale for c, b in bmap.items()}
-    planner = Planner.build(cfg, grid, bmap2, amap, profile_name, net, spcfg,
-                            util=util)
-    schedule = sched.stream_only(grid, planner.ts, planner.tc)
-    res = _run_engine(cfg, grid, bmap2, amap, planner, schedule,
-                      profile_name, net, spcfg, util=util, seed=seed,
-                      context_len=wl.context_len, bw_seed=seed + 991)
-    return PipelineResult("cachegen", res.ttft_s, res.energy["total_j"],
-                          QUALITY_OF_BITS[chosen], res,
-                          {"bits": chosen})
+    plan = plan_policy("cachegen", cfg, wl, profile_name, net, spcfg,
+                       util=util, slo_s=slo_s)
+    return _run_plan(plan, cfg, profile_name, net, spcfg, util=util,
+                     seed=seed)
 
 
 def run_kivi(cfg, wl, profile_name, net, spcfg, *, util=0.0,
              seed=0, bits: int = 3) -> PipelineResult:
     """Stream-only with fixed asymmetric low-bit quantization (KIVI-like):
     2-bit-class keys/values -> small transfers, lower fidelity."""
-    grid, bmap, amap = _engine_grid(cfg, wl, spcfg)
-    scale = bits / spcfg.quant_bits
-    bmap2 = {c: b * scale for c, b in bmap.items()}
-    planner = Planner.build(cfg, grid, bmap2, amap, profile_name, net, spcfg,
-                            util=util)
-    schedule = sched.stream_only(grid, planner.ts, planner.tc)
-    res = _run_engine(cfg, grid, bmap2, amap, planner, schedule,
-                      profile_name, net, spcfg, util=util, seed=seed,
-                      context_len=wl.context_len, bw_seed=seed + 991)
-    return PipelineResult("kivi", res.ttft_s, res.energy["total_j"],
-                          QUALITY_OF_BITS[bits], res)
+    plan = plan_policy("kivi", cfg, wl, profile_name, net, spcfg,
+                       util=util, kivi_bits=bits)
+    return _run_plan(plan, cfg, profile_name, net, spcfg, util=util,
+                     seed=seed)
 
 
 PIPELINES = {

@@ -99,6 +99,39 @@ class NetworkProfile:
         return np.maximum(out, self.floor_bw)
 
 
+@dataclasses.dataclass(frozen=True)
+class SharedLinkModel:
+    """Shared last-hop link serving N concurrent KV streams.
+
+    One capacity trace (a ``NetworkProfile``) is fair-shared among active
+    flows; contention is not free — per-flow protocol overhead (MAC
+    contention, cwnd thrash, header amplification) shaves the *aggregate*
+    goodput as flows are added:
+
+        eta(n) = max(min_efficiency, 1 - contention_overhead * (n - 1))
+        per-flow share(n) = eta(n) / n
+
+    ``eta(1) == 1`` so a single flow reproduces exclusive-link semantics
+    exactly (the serving cluster degenerates to the classic per-request
+    engine). Used by ``repro.serving.cluster.SharedLinkArbiter``.
+    """
+    profile: NetworkProfile
+    contention_overhead: float = 0.05
+    min_efficiency: float = 0.65
+
+    def aggregate_efficiency(self, n_flows: int) -> float:
+        if n_flows <= 1:
+            return 1.0
+        return max(self.min_efficiency,
+                   1.0 - self.contention_overhead * (n_flows - 1))
+
+    def per_flow_fraction(self, n_flows: int) -> float:
+        """Fraction of the instantaneous trace capacity one flow gets."""
+        if n_flows <= 0:
+            return 1.0
+        return self.aggregate_efficiency(n_flows) / n_flows
+
+
 NETWORKS: dict[str, NetworkProfile] = {
     # paper §III: cloud-to-device 850 +- 264 Mbps
     "campus-wifi": NetworkProfile("campus-wifi", 850e6 / 8, 264e6 / 8),

@@ -10,11 +10,25 @@ The engine is work-conserving: within the scheduled priority order the
 compute server starts the first dependency-ready chunk. The runtime
 controller (§IV-D) may migrate queued chunks between paths at event
 boundaries. TTFT = context completion + first-token decode.
+
+Two driving modes:
+
+  - ``run(schedule)`` — the classic closed loop: this request owns the
+    whole ``BandwidthIntegrator`` and the device, and the engine advances
+    its own clock (single-request semantics, unchanged).
+  - ``session(schedule)`` — an event-yielding coroutine stepped by an
+    *external* clock (``repro.serving.cluster.ServingCluster``). The engine
+    yields :class:`StreamStart` / :class:`ComputeStart` requests and a
+    :class:`Wait` marker; the driver owns all timing and resumes the
+    generator with :class:`Completion` events. This is what lets N
+    concurrent requests share one link (bandwidth arbiter) and couple
+    their compute latencies (closed-loop utilization) — ``run()`` is now
+    just the trivial single-request driver of the same coroutine.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -23,6 +37,14 @@ from repro.core.controller import RuntimeController
 from repro.core.costs import (DeviceProfile, EnergyMeter, GroundTruthLatency,
                               NetworkProfile)
 from repro.core.scheduler import Schedule
+
+
+class LinkStarvedError(RuntimeError):
+    """The bandwidth trace (including its tail extrapolation) cannot
+    deliver the requested bytes within ``max_horizon_s`` of the start
+    time. Raised by :meth:`BandwidthIntegrator.finish_time` instead of
+    silently returning a completion time earlier than the actual
+    delivery (the pre-fix behaviour when the trace flatlines at ~0)."""
 
 
 @dataclasses.dataclass
@@ -70,14 +92,27 @@ class BandwidthIntegrator:
             return self.cum[-1] + (t - (len(self.cum) - 1) * self.dt) * tail_bw
         return self.cum[i0] + (i - i0) * (self.cum[i0 + 1] - self.cum[i0])
 
-    def finish_time(self, t0: float, nbytes: float) -> float:
-        """Earliest t where nbytes are delivered starting at t0."""
+    def finish_time(self, t0: float, nbytes: float, *,
+                    max_horizon_s: float = 1e5) -> float:
+        """Earliest t where nbytes are delivered starting at t0.
+
+        Raises :class:`LinkStarvedError` when the trace cannot deliver
+        the bytes within ``max_horizon_s`` seconds of ``t0`` (starved /
+        flatlined link) rather than returning an undershooting time.
+        """
+        if nbytes <= 0:
+            return t0
         target = self._at(t0) + nbytes
         lo, hi = t0, t0 + 1e-3
         while self._at(hi) < target:
             hi = t0 + (hi - t0) * 2
-            if hi - t0 > 1e5:
+            if hi - t0 > max_horizon_s:
                 break
+        if self._at(hi) < target:
+            raise LinkStarvedError(
+                f"link starved: {nbytes:.0f} B not deliverable within "
+                f"{max_horizon_s:.0f}s of t={t0:.3f} "
+                f"(delivered {self._at(hi) - self._at(t0):.0f} B)")
         for _ in range(60):
             mid = 0.5 * (lo + hi)
             if self._at(mid) < target:
@@ -102,6 +137,44 @@ def decode_first_token_seconds(cfg, context_len: int,
         / max(cfg.num_layers, 1)
 
 
+# ---------------------------------------------------------------------------
+# Session protocol events (engine <-> external clock)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamStart:
+    """Engine requests a network transfer for `chunk` (its net server is
+    idle). The driver owns delivery timing; `t_proc` is the on-device
+    decode+dequant tail the driver must add after the transfer lands."""
+    chunk: Chunk
+    nbytes: float
+    t_proc: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeStart:
+    """Engine starts computing `chunk`; `duration_s` is the ground-truth
+    latency already inflated by the utilization the driver supplied via
+    `util_fn` (closed-loop) or the static `util` fallback."""
+    chunk: Chunk
+    duration_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Wait:
+    """Engine has nothing more to start; the driver must resume the
+    generator with the request's next Completion."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    path: str                 # "stream" | "compute"
+    chunk: Chunk
+    t_start: float            # service begin (stream: transfer start)
+    t_end: float              # chunk available (stream: incl. t_proc)
+
+
 @dataclasses.dataclass
 class HybridEngine:
     grid: ChunkGrid
@@ -112,44 +185,53 @@ class HybridEngine:
     profile: DeviceProfile
     bw: BandwidthIntegrator
     cfg_model: object            # ModelConfig (for dense/proj costs)
-    util: float = 0.0            # external contention (Fig. 14)
+    util: float = 0.0            # static external contention (Fig. 14)
     controller: Optional[RuntimeController] = None
     seed: int = 0
 
-    def _t_comp_actual(self, c: Chunk, rng) -> float:
+    def _t_comp_actual(self, c: Chunk, rng, util: Optional[float] = None
+                       ) -> float:
         if c.l == self.grid.n_l - 1:
             return self.profile.t_proj_s
-        t = self.gt.attn_seconds(self.active_blocks[c], self.util, rng)
+        u = self.util if util is None else util
+        t = self.gt.attn_seconds(self.active_blocks[c], u, rng)
         return t + self.gt.dense_seconds(self.cfg_model) / max(self.grid.n_h, 1)
 
-    def run(self, schedule: Schedule, *, context_len: int) -> EngineResult:
+    # ------------------------------------------------------------------
+    # Event-yielding core (steppable by an external clock)
+    # ------------------------------------------------------------------
+    def session(self, schedule: Schedule, *, context_len: int,
+                t_start: float = 0.0,
+                util_fn: Optional[Callable[[], float]] = None):
+        """Generator form of the execution loop.
+
+        Yields StreamStart / ComputeStart requests (driver replies None)
+        and Wait markers (driver replies with this request's next
+        Completion). Returns an EngineResult via StopIteration.value;
+        times in the result are on the driver's clock (`t_start`-based),
+        so `ttft_s`/`context_done_s` are absolute for cluster drivers and
+        identical to the classic values when t_start == 0.
+        """
         rng = np.random.default_rng(self.seed)
         g = self.grid
-        state = np.zeros(g.size, np.int8)
 
+        state = np.zeros(g.size, np.int8)
         stream_q: list[Chunk] = []
         comp_q: list[Chunk] = []
-        stage_of = {}
-        for si, st in enumerate(schedule.stages):
-            for c in st.stream:
-                stream_q.append(c)
-                stage_of[c] = si
-            for c in st.comp:
-                comp_q.append(c)
-                stage_of[c] = si
+        for st in schedule.stages:
+            stream_q.extend(st.stream)
+            comp_q.extend(st.comp)
 
-        now = 0.0
-        net_free = 0.0
-        dev_free = 0.0
-        net_busy_until = {}
+        now = t_start
+        net_busy = False
+        dev_busy = False
+        inflight = 0
         done = 0
         total = g.size
         timeline = []
         stream_busy = comp_busy = proc_busy = bytes_streamed = 0.0
         streamed_set, computed_set = set(), set()
         n_migr = 0
-        # in-flight: (finish_time, chunk, path)
-        inflight: list[tuple[float, Chunk, str]] = []
 
         def ready_set():
             return {c for c in comp_q if g.compute_ready(c, state)}
@@ -161,37 +243,35 @@ class HybridEngine:
                 raise RuntimeError("engine livelock")
             progressed = False
             # start network transfer
-            if net_free <= now and stream_q:
+            if not net_busy and stream_q:
                 c = stream_q.pop(0)
                 nbytes = self.chunk_bytes[c]
                 t_proc = self.profile.t_proc(nbytes)
-                t_end = self.bw.finish_time(now, nbytes) + t_proc
-                net_free = t_end
-                inflight.append((t_end, c, "stream"))
-                stream_busy += t_end - now
+                yield StreamStart(c, nbytes, t_proc)
+                net_busy = True
+                inflight += 1
                 proc_busy += t_proc
                 bytes_streamed += nbytes
-                timeline.append((now, t_end, "stream", c))
                 progressed = True
             # start compute on first ready chunk in priority order
-            if dev_free <= now:
+            if not dev_busy:
                 started = None
                 for i, c in enumerate(comp_q):
                     if g.compute_ready(c, state):
                         started = comp_q.pop(i)
                         break
                 if started is not None:
-                    dt = self._t_comp_actual(started, rng)
-                    t_end = now + dt
-                    dev_free = t_end
-                    inflight.append((t_end, started, "compute"))
+                    u = util_fn() if util_fn is not None else None
+                    dt = self._t_comp_actual(started, rng, u)
+                    yield ComputeStart(started, dt)
+                    dev_busy = True
+                    inflight += 1
                     comp_busy += dt
-                    timeline.append((now, t_end, "compute", started))
                     if self.controller:
                         self.controller.record_compute(
-                            t_end, dt, self.t_comp_pred[started])
+                            now + dt, dt, self.t_comp_pred[started])
                     progressed = True
-            if not inflight:
+            if inflight == 0:
                 if not progressed:
                     if comp_q and not stream_q:
                         # dependency-starved compute chunks (e.g. after a
@@ -200,17 +280,23 @@ class HybridEngine:
                         continue
                     raise RuntimeError("engine stalled")
                 continue
-            # advance to next completion
-            inflight.sort(key=lambda e: e[0])
-            t_end, c, path = inflight.pop(0)
-            now = max(now, t_end)
+            # park until the driver delivers this request's next completion
+            ev = yield Wait()
+            assert isinstance(ev, Completion), ev
+            inflight -= 1
+            now = max(now, ev.t_end)
+            c = ev.chunk
             i = g.index(c)
-            if path == "stream":
+            timeline.append((ev.t_start, ev.t_end, ev.path, c))
+            if ev.path == "stream":
+                net_busy = False
+                stream_busy += ev.t_end - ev.t_start
                 state[i] = State.STREAMED
                 streamed_set.add(c)
                 if self.controller:
                     self.controller.record_stream(now, self.chunk_bytes[c])
             else:
+                dev_busy = False
                 state[i] = State.COMPUTED
                 computed_set.add(c)
             done += 1
@@ -243,7 +329,7 @@ class HybridEngine:
         ttft = now + t_first
         meter = EnergyMeter(self.profile,
                             compute_busy_s=comp_busy + t_first,
-                            nic_busy_s=stream_busy, wall_s=ttft)
+                            nic_busy_s=stream_busy, wall_s=ttft - t_start)
         return EngineResult(
             ttft_s=ttft, context_done_s=now, energy=meter.breakdown(),
             n_streamed=len(streamed_set), n_computed=len(computed_set),
@@ -251,3 +337,30 @@ class HybridEngine:
             compute_busy_s=comp_busy, proc_busy_s=proc_busy,
             timeline=timeline, streamed_set=streamed_set,
             computed_set=computed_set, bytes_streamed=bytes_streamed)
+
+    # ------------------------------------------------------------------
+    # Classic single-request driver (exclusive link + device)
+    # ------------------------------------------------------------------
+    def run(self, schedule: Schedule, *, context_len: int) -> EngineResult:
+        gen = self.session(schedule, context_len=context_len)
+        now = 0.0
+        # at most one stream + one compute in flight for a single request
+        inflight: list[tuple[float, float, str, Chunk]] = []
+        try:
+            ev = next(gen)
+            while True:
+                if isinstance(ev, StreamStart):
+                    t_end = self.bw.finish_time(now, ev.nbytes) + ev.t_proc
+                    inflight.append((t_end, now, "stream", ev.chunk))
+                    ev = gen.send(None)
+                elif isinstance(ev, ComputeStart):
+                    inflight.append((now + ev.duration_s, now, "compute",
+                                     ev.chunk))
+                    ev = gen.send(None)
+                else:                                   # Wait
+                    inflight.sort(key=lambda e: e[0])
+                    t_end, t_st, path, c = inflight.pop(0)
+                    now = max(now, t_end)
+                    ev = gen.send(Completion(path, c, t_st, now))
+        except StopIteration as stop:
+            return stop.value

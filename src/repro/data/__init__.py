@@ -1,0 +1,1 @@
+"""Workload synthesis and dataset profiles (paper Table III mixes)."""

@@ -1,0 +1,8 @@
+"""Serving layer: single-request server, multi-request cluster, traffic.
+
+- ``engine``  — SparKVServer: concrete context registration + per-request
+  loading/decoding (real compression round-trip, real logit checks).
+- ``cluster`` — ServingCluster: N concurrent loads on one clock with a
+  shared-link bandwidth arbiter and closed-loop compute contention.
+- ``traffic`` — arrival processes and request mixes for fleet runs.
+"""

@@ -1,0 +1,412 @@
+"""Multi-request serving cluster: shared-link arbitration + contention
+coupling on one discrete-event clock.
+
+The single-request engine (`repro.core.engine.HybridEngine.run`) models a
+device that owns the whole NIC and sees contention only as a static `util`
+scalar. This module runs **N concurrent context loads** against shared
+resources:
+
+  - :class:`SharedLinkArbiter` — fair-shares one ``BandwidthIntegrator``
+    trace across all in-flight streams. Per-flow goodput is
+    ``trace(t) * eta(n) / n`` (``repro.core.costs.SharedLinkModel``), so
+    two concurrent streams measurably slow each other; with one flow the
+    arbiter reproduces exclusive-link semantics bit-for-bit.
+  - **closed-loop utilization** — each request's ground-truth compute
+    latency is inflated by the *actual* number of in-flight compute chunks
+    (``util = n_other_computing / capacity``), replacing the hand-set
+    `util` scalar; the same figure feeds the latency predictor's U feature
+    at admission time. SparKV's runtime controller therefore observes real
+    contention and migrates accordingly.
+  - **admission queue** — at most ``max_concurrency`` requests are in
+    service; arrivals beyond that wait FIFO. Per-request policy comes from
+    the :class:`RequestSpec` (or a ``policy_fn`` override at admission).
+
+Protocol with the engine: each admitted request holds an
+``HybridEngine.session`` generator. The cluster resumes a session only at
+that request's own completion events; sessions yield ``StreamStart`` /
+``ComputeStart`` requests which the cluster maps onto the arbiter and the
+event heap. See ``repro.core.engine`` for the event dataclasses.
+
+Fleet metrics: p50/p99 TTFT (arrival -> first token), goodput (completed
+requests per second of makespan), energy per request, migration counts.
+
+Typical use::
+
+    specs = poisson_trace(...)                      # repro.serving.traffic
+    cluster = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi")
+    report = cluster.run(specs)
+    print(report.summary())
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core.chunks import Chunk
+from repro.core.costs import (GroundTruthLatency, NetworkProfile, PROFILES,
+                              NETWORKS, SharedLinkModel)
+from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
+                               HybridEngine, StreamStart, Wait,
+                               decode_first_token_seconds)
+from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
+
+
+# ---------------------------------------------------------------------------
+# Shared-link bandwidth arbiter
+# ---------------------------------------------------------------------------
+
+
+class SharedLinkArbiter:
+    """Fair-share scheduler over one cumulative-bandwidth trace.
+
+    Active flows split the instantaneous link capacity equally, scaled by
+    the aggregate contention efficiency ``eta(n)`` of the link model. The
+    active set is piecewise-constant between cluster events: the cluster
+    always advances time to the earliest of (heap event, earliest flow
+    completion), so :meth:`advance` only ever integrates over intervals
+    with a fixed membership.
+    """
+
+    def __init__(self, integrator: BandwidthIntegrator,
+                 link: Optional[SharedLinkModel] = None):
+        self.bw = integrator
+        self.link = link
+        self.t = 0.0
+        self._rem: dict[int, float] = {}      # flow key -> bytes left
+
+    def n_active(self) -> int:
+        return len(self._rem)
+
+    def _fraction(self) -> float:
+        n = len(self._rem)
+        if n == 0:
+            return 1.0
+        eta = self.link.aggregate_efficiency(n) if self.link else 1.0
+        return eta / n
+
+    def advance(self, t: float) -> None:
+        """Integrate deliveries over [self.t, t] (constant active set)."""
+        if t <= self.t:
+            return
+        if self._rem:
+            share = self.bw.bytes_between(self.t, t) * self._fraction()
+            for k in self._rem:
+                self._rem[k] = max(self._rem[k] - share, 0.0)
+        self.t = t
+
+    def add(self, key: int, nbytes: float) -> None:
+        assert key not in self._rem, f"flow {key} already active"
+        self._rem[key] = float(nbytes)
+
+    def complete(self, key: int) -> None:
+        del self._rem[key]
+
+    def next_completion(self) -> Optional[tuple[float, int]]:
+        """(t_done, key) of the earliest flow to finish if the active set
+        stays fixed — with equal shares that is the min-remaining flow."""
+        if not self._rem:
+            return None
+        key, rem = min(self._rem.items(), key=lambda kv: (kv[1], kv[0]))
+        need_on_link = rem / self._fraction()
+        return self.bw.finish_time(self.t, need_on_link), key
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RequestSpec:
+    """One job for the cluster: when it arrives and what it loads."""
+    arrival_s: float
+    context_len: int = 8192
+    dataset: str = "longchat"
+    policy: str = "sparkv"
+    seed: int = 0
+    wl: Optional[WorkloadChunks] = None     # overrides synthesis if given
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    spec: RequestSpec
+    policy: str
+    admit_s: float
+    context_done_s: float                   # all chunks assembled
+    done_s: float                           # context assembled + first token
+    ttft_s: float                           # done_s - arrival_s (incl. queue)
+    queue_s: float
+    energy_j: float
+    quality: float
+    n_streamed: int
+    n_computed: int
+    n_migrations: int
+    stream_busy_s: float
+    compute_busy_s: float
+    bytes_streamed: float
+
+
+@dataclasses.dataclass
+class _ActiveRequest:
+    rid: int
+    spec: RequestSpec
+    plan: B.RequestPlan
+    gen: object                             # engine session generator
+    admit_s: float
+    # in-flight stream bookkeeping (one per request at a time)
+    stream_chunk: Optional[Chunk] = None
+    stream_t0: float = 0.0
+    stream_t_proc: float = 0.0
+
+
+@dataclasses.dataclass
+class FleetReport:
+    records: list[RequestRecord]
+    makespan_s: float
+    n_arrived: int
+
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.ttft_s for r in self.records])
+
+    def summary(self) -> dict:
+        t = self.ttfts()
+        done = len(self.records)
+        return {
+            "n_done": done,
+            "ttft_p50_s": float(np.percentile(t, 50)) if done else float("nan"),
+            "ttft_p99_s": float(np.percentile(t, 99)) if done else float("nan"),
+            "ttft_mean_s": float(t.mean()) if done else float("nan"),
+            "goodput_rps": done / self.makespan_s if self.makespan_s else 0.0,
+            "energy_per_req_j": float(np.mean([r.energy_j
+                                               for r in self.records]))
+            if done else float("nan"),
+            "migrations_total": sum(r.n_migrations for r in self.records),
+            "stream_busy_total_s": sum(r.stream_busy_s
+                                       for r in self.records),
+            "queue_mean_s": float(np.mean([r.queue_s for r in self.records]))
+            if done else float("nan"),
+        }
+
+
+# ---------------------------------------------------------------------------
+# The cluster
+# ---------------------------------------------------------------------------
+
+
+class ServingCluster:
+    """Discrete-event loop running N concurrent context loads.
+
+    Parameters
+    ----------
+    cfg, spcfg : model / SparKV configs shared by all requests.
+    profile, network : device profile name and network profile (name or
+        ``NetworkProfile``) — one shared device, one shared link.
+    capacity : compute slots used to normalize closed-loop utilization
+        (``util = n_other_inflight_compute / capacity``).
+    max_concurrency : admission limit; excess arrivals queue FIFO.
+    closed_loop : couple compute latency to actual in-flight compute; when
+        False every request sees the hand-set ``static_util`` (the legacy
+        Fig. 14 mode).
+    link : ``SharedLinkModel`` for contention overhead; ``None`` disables
+        the overhead term but still fair-shares the trace.
+    bw_trace / bw_dt : optional explicit bandwidth trace (otherwise an OU
+        trace is drawn from the network profile with ``bw_seed``).
+    """
+
+    def __init__(self, cfg, spcfg, profile: str = "jetson-orin",
+                 network="campus-wifi", *, capacity: int = 8,
+                 max_concurrency: int = 8, closed_loop: bool = True,
+                 static_util: float = 0.0,
+                 link: Optional[SharedLinkModel] = None,
+                 policy_fn: Optional[Callable] = None,
+                 bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
+                 bw_seed: int = 991, seed: int = 0):
+        self.cfg = cfg
+        self.spcfg = spcfg
+        self.profile_name = profile
+        self.profile = PROFILES[profile]
+        self.net: NetworkProfile = (NETWORKS[network]
+                                    if isinstance(network, str) else network)
+        self.capacity = capacity
+        self.max_concurrency = max_concurrency
+        self.closed_loop = closed_loop
+        self.static_util = static_util
+        self.link = link if link is not None else SharedLinkModel(self.net)
+        self.policy_fn = policy_fn
+        self.bw_trace = bw_trace
+        self.bw_dt = bw_dt
+        self.bw_seed = bw_seed
+        self.seed = seed
+
+    # ---- closed-loop contention ----
+    def _coupled_util(self) -> float:
+        if not self.closed_loop:
+            return self.static_util
+        return min(len(self._computing) / max(self.capacity, 1), 0.95)
+
+    # ---- main loop ----
+    def run(self, specs: list[RequestSpec]) -> FleetReport:
+        specs = sorted(specs, key=lambda s: s.arrival_s)
+        wls = [s.wl if s.wl is not None
+               else synthesize(self.cfg, s.context_len,
+                               DATASETS[s.dataset],
+                               chunk_tokens=self.spcfg.chunk_tokens,
+                               quant_bits=self.spcfg.quant_bits)
+               for s in specs]
+
+        total_bytes = sum(w.total_bytes() for w in wls)
+        if self.bw_trace is None:
+            horizon = max(20.0, 6 * total_bytes / self.net.mean_bw + 10
+                          + (specs[-1].arrival_s if specs else 0.0))
+            rng = np.random.default_rng(self.bw_seed)
+            trace = self.net.trace(rng, horizon, self.bw_dt)
+        else:
+            trace = self.bw_trace
+        integrator = BandwidthIntegrator(trace, self.bw_dt)
+        arbiter = SharedLinkArbiter(integrator, self.link)
+
+        self._computing: set[int] = set()
+        active: dict[int, _ActiveRequest] = {}
+        queue: list[tuple[int, RequestSpec]] = []
+        records: list[RequestRecord] = []
+        # heap: (t, seq, kind, rid, payload)
+        heap: list = []
+        seq = 0
+        for rid, s in enumerate(specs):
+            heapq.heappush(heap, (s.arrival_s, seq, "arrival", rid, s))
+            seq += 1
+        arrival_s = {rid: s.arrival_s for rid, s in enumerate(specs)}
+        now = 0.0
+        makespan = 0.0
+
+        def drive(st: _ActiveRequest, reply=None, *, prime: bool = False):
+            """Advance one session until it parks (Wait) or finishes.
+            Returns the EngineResult when the session completed, else None."""
+            nonlocal seq
+            try:
+                ev = next(st.gen) if prime else st.gen.send(reply)
+                while True:
+                    if isinstance(ev, StreamStart):
+                        st.stream_chunk = ev.chunk
+                        st.stream_t0 = now
+                        st.stream_t_proc = ev.t_proc
+                        arbiter.add(st.rid, ev.nbytes)
+                        ev = st.gen.send(None)
+                    elif isinstance(ev, ComputeStart):
+                        self._computing.add(st.rid)
+                        heapq.heappush(heap, (now + ev.duration_s, seq,
+                                              "compute_done", st.rid,
+                                              (ev.chunk, now)))
+                        seq += 1
+                        ev = st.gen.send(None)
+                    else:
+                        assert isinstance(ev, Wait)
+                        return None
+            except StopIteration as stop:
+                return stop.value
+
+        def admit(rid: int, spec: RequestSpec):
+            nonlocal seq
+            policy = spec.policy
+            if self.policy_fn is not None:
+                policy = self.policy_fn(spec, self)
+            plan = B.plan_policy(policy, self.cfg, wls[rid],
+                                 self.profile_name, self.net, self.spcfg,
+                                 util=self._coupled_util())
+            gt = GroundTruthLatency(
+                self.profile, self.cfg.resolved_head_dim
+                if self.cfg.num_heads else 64)
+            t_pred = {c: plan.planner.tc[i]
+                      for i, c in enumerate(plan.grid.chunks())}
+            eng = HybridEngine(
+                grid=plan.grid, chunk_bytes=plan.bytes_map,
+                active_blocks=plan.active_map, t_comp_pred=t_pred,
+                gt=gt, profile=self.profile, bw=integrator,
+                cfg_model=self.cfg, util=self.static_util,
+                controller=plan.controller,
+                seed=self.seed + spec.seed)
+            st = _ActiveRequest(rid=rid, spec=spec, plan=plan,
+                                gen=eng.session(
+                                    plan.schedule,
+                                    context_len=plan.context_len,
+                                    t_start=now,
+                                    util_fn=self._coupled_util),
+                                admit_s=now)
+            active[rid] = st
+            res = drive(st, prime=True)
+            if res is not None:
+                finalize(st, res)
+
+        def finalize(st: _ActiveRequest, res):
+            nonlocal makespan
+            active.pop(st.rid)
+            self._computing.discard(st.rid)
+            quality = B._mixed_quality(res, st.plan.quality_bits)
+            records.append(RequestRecord(
+                rid=st.rid, spec=st.spec, policy=st.plan.policy,
+                admit_s=st.admit_s, context_done_s=res.context_done_s,
+                done_s=res.ttft_s,
+                ttft_s=res.ttft_s - arrival_s[st.rid],
+                queue_s=st.admit_s - arrival_s[st.rid],
+                energy_j=res.energy["total_j"], quality=quality,
+                n_streamed=res.n_streamed, n_computed=res.n_computed,
+                n_migrations=res.n_migrations,
+                stream_busy_s=res.stream_busy_s,
+                compute_busy_s=res.compute_busy_s,
+                bytes_streamed=res.bytes_streamed))
+            makespan = max(makespan, res.ttft_s)
+            if queue:
+                admit(*queue.pop(0))
+
+        guard = 0
+        limit = 1000 + 200 * sum(w.n_t * w.n_l * max(w.n_h, 1) for w in wls)
+        while heap or arbiter.n_active():
+            guard += 1
+            if guard > limit:
+                raise RuntimeError("cluster livelock")
+            nc = arbiter.next_completion()
+            t_heap = heap[0][0] if heap else float("inf")
+            if nc is not None and nc[0] <= t_heap:
+                t_done, rid = nc
+                arbiter.advance(t_done)
+                arbiter.complete(rid)
+                now = t_done
+                st = active[rid]
+                # decode+dequant tail happens on-device after the transfer
+                heapq.heappush(heap, (t_done + st.stream_t_proc, seq,
+                                      "stream_avail", rid,
+                                      (st.stream_chunk, st.stream_t0)))
+                seq += 1
+                continue
+            if not heap:
+                break
+            t, _, kind, rid, payload = heapq.heappop(heap)
+            arbiter.advance(t)
+            now = t
+            if kind == "arrival":
+                if len(active) < self.max_concurrency:
+                    admit(rid, payload)
+                else:
+                    queue.append((rid, payload))
+            elif kind == "compute_done":
+                chunk, t0 = payload
+                self._computing.discard(rid)
+                st = active[rid]
+                res = drive(st, Completion("compute", chunk, t0, t))
+                if res is not None:
+                    finalize(st, res)
+            elif kind == "stream_avail":
+                chunk, t0 = payload
+                st = active[rid]
+                st.stream_chunk = None
+                res = drive(st, Completion("stream", chunk, t0, t))
+                if res is not None:
+                    finalize(st, res)
+        assert not active and not queue, "cluster finished with stuck work"
+        return FleetReport(records=sorted(records, key=lambda r: r.rid),
+                           makespan_s=makespan, n_arrived=len(specs))

@@ -14,7 +14,11 @@ each request then *loads* that context through a policy pipeline
 
 The device-utilization signal the paper reads from nvidia-smi is exposed
 here as `utilization()` (active requests / capacity) and feeds the
-latency predictor's U feature.
+latency predictor's U feature. For *timing under concurrency* that static
+signal is superseded by `serve_fleet()`, which submits registered
+contexts into `repro.serving.cluster.ServingCluster`: N loads share the
+link through the bandwidth arbiter and couple compute latencies through
+closed-loop utilization.
 """
 from __future__ import annotations
 
@@ -215,6 +219,33 @@ class SparKVServer:
                 wall_s=time.time() - t_wall)
         finally:
             self.active_requests -= 1
+
+    def serve_fleet(self, jobs: list[tuple[int, float, str]], *,
+                    closed_loop: bool = True, static_util: float = 0.0,
+                    max_concurrency: Optional[int] = None,
+                    link=None, bw_seed: int = 991):
+        """Serve many registered contexts concurrently on one clock.
+
+        jobs: (cid, arrival_s, policy) triples over contexts previously
+        created with register_context(). Timing/energy come from the
+        multi-request cluster (shared-link arbiter + contention-coupled
+        engines); KV content for any request can still be assembled
+        afterwards with load_context(). Returns a FleetReport.
+        """
+        from repro.serving.cluster import RequestSpec, ServingCluster
+        specs = []
+        for i, (cid, arrival_s, policy) in enumerate(jobs):
+            st = self.contexts[cid]
+            specs.append(RequestSpec(
+                arrival_s=arrival_s, context_len=st.wl.context_len,
+                policy=policy, seed=i, wl=st.wl))
+        cluster = ServingCluster(
+            self.model.cfg, self.spcfg, self.profile, self.network,
+            capacity=self.capacity,
+            max_concurrency=max_concurrency or self.capacity,
+            closed_loop=closed_loop, static_util=static_util,
+            link=link, bw_seed=bw_seed, seed=self.seed)
+        return cluster.run(specs)
 
     def _decode(self, st: StoredContext, cache, prompt, max_new):
         cfg = self.model.cfg

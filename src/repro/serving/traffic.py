@@ -1,0 +1,106 @@
+"""Fleet traffic generator: arrival processes + request mixes.
+
+Produces ``RequestSpec`` lists for ``repro.serving.cluster``:
+
+  - **poisson**: memoryless arrivals at ``rate_rps`` (the open-loop
+    baseline for p50/p99 TTFT under load);
+  - **bursty**: a two-state Markov-modulated Poisson process — an "on"
+    state multiplies the base rate by ``burst_factor`` (flash crowds /
+    synchronized app wakeups), "off" drops to the base rate;
+  - **uniform**: deterministic equal spacing (useful for regression
+    tests where arrival jitter is noise).
+
+Request mixes draw context lengths per dataset profile (rounded to whole
+chunks) and policies from a weighted table, so one trace can interleave
+sparkv / strong_hybrid / local_prefill requests the way a real fleet
+mixes device capabilities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.data.workloads import DATASETS
+from repro.serving.cluster import RequestSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficProfile:
+    rate_rps: float = 0.5
+    arrival: str = "poisson"            # poisson | bursty | uniform
+    # bursty (MMPP) knobs
+    burst_factor: float = 6.0           # rate multiplier while "on"
+    mean_on_s: float = 4.0
+    mean_off_s: float = 12.0
+    # request mix
+    context_mix: tuple = (("longchat", 1.0),)     # (dataset, weight)
+    policy_mix: tuple = (("sparkv", 1.0),)        # (policy, weight)
+    context_jitter: float = 0.25        # lognormal sigma on dataset mean_len
+    min_context: int = 2048
+    max_context: int = 16384
+    chunk_tokens: int = 1024
+
+
+def _arrival_times(profile: TrafficProfile, n: int,
+                   rng: np.random.Generator) -> np.ndarray:
+    if profile.arrival == "uniform":
+        return np.arange(n) / max(profile.rate_rps, 1e-9)
+    if profile.arrival == "poisson":
+        gaps = rng.exponential(1.0 / profile.rate_rps, n)
+        gaps[0] = 0.0
+        return np.cumsum(gaps)
+    if profile.arrival == "bursty":
+        # two-state MMPP, exponential sojourn in each state
+        times = np.empty(n)
+        t, state_end, on = 0.0, rng.exponential(profile.mean_off_s), False
+        for i in range(n):
+            rate = profile.rate_rps * (profile.burst_factor if on else 1.0)
+            t += rng.exponential(1.0 / rate) if i else 0.0
+            while t > state_end:
+                on = not on
+                state_end += rng.exponential(
+                    profile.mean_on_s if on else profile.mean_off_s)
+            times[i] = t
+        return times
+    raise ValueError(f"unknown arrival process {profile.arrival!r}")
+
+
+def _weighted(table: tuple, rng: np.random.Generator) -> str:
+    names = [k for k, _ in table]
+    w = np.array([v for _, v in table], float)
+    return names[rng.choice(len(names), p=w / w.sum())]
+
+
+def generate_trace(profile: TrafficProfile, n_requests: int,
+                   *, seed: int = 0,
+                   rng: Optional[np.random.Generator] = None
+                   ) -> list[RequestSpec]:
+    """Draw `n_requests` specs: arrival times + per-request mix."""
+    rng = rng or np.random.default_rng(seed)
+    arrivals = _arrival_times(profile, n_requests, rng)
+    specs = []
+    for i, t in enumerate(arrivals):
+        ds_name = _weighted(profile.context_mix, rng)
+        ds = DATASETS[ds_name]
+        raw = ds.mean_len * np.exp(rng.normal(0.0, profile.context_jitter))
+        raw = float(np.clip(raw, profile.min_context, profile.max_context))
+        ctx = max(profile.chunk_tokens,
+                  int(raw // profile.chunk_tokens) * profile.chunk_tokens)
+        specs.append(RequestSpec(
+            arrival_s=float(t), context_len=ctx, dataset=ds_name,
+            policy=_weighted(profile.policy_mix, rng), seed=seed + i))
+    return specs
+
+
+def poisson_trace(n_requests: int, rate_rps: float, *,
+                  policy: str = "sparkv", dataset: str = "longchat",
+                  max_context: int = 8192, seed: int = 0
+                  ) -> list[RequestSpec]:
+    """Shorthand: homogeneous Poisson trace with a single policy."""
+    prof = TrafficProfile(rate_rps=rate_rps, arrival="poisson",
+                          context_mix=((dataset, 1.0),),
+                          policy_mix=((policy, 1.0),),
+                          max_context=max_context)
+    return generate_trace(prof, n_requests, seed=seed)

@@ -1,0 +1,1 @@
+"""Block-sparse attention masks: block scores + mass-threshold selection."""

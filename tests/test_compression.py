@@ -1,6 +1,7 @@
 """Huffman codec + quantization properties (hypothesis)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dep: skip suite if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.compression import huffman as H

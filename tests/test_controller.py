@@ -1,0 +1,143 @@
+"""RuntimeController migration paths + the engine-side guards.
+
+Covers the previously-untested paths: stream->compute and compute->stream
+migrations, the dependency-stranding guard (a chunk whose compute-assigned
+dependent needs it *computed* must not be migrated to streaming), and the
+starved-compute fallback (engine moves dependency-dead compute chunks to
+the always-feasible stream path).
+"""
+import numpy as np
+
+from repro.configs import SparKVConfig, get_config
+from repro.core.chunks import Chunk, ChunkGrid
+from repro.core.controller import Migration, RuntimeController
+from repro.core.costs import GroundTruthLatency, PROFILES
+from repro.core.engine import BandwidthIntegrator, HybridEngine
+from repro.core.scheduler import Schedule, Stage
+
+CFG = get_config("sparkv-qwen3-4b")
+PROFILE = PROFILES["jetson-orin"]
+
+
+class ScriptedController:
+    """Stands in for RuntimeController: returns queued migrations once."""
+
+    def __init__(self, migrations):
+        self._pending = list(migrations)
+
+    def record_stream(self, t, nbytes):
+        pass
+
+    def record_compute(self, t, actual_s, predicted_s):
+        pass
+
+    def decide(self, now, **kw):
+        out, self._pending = self._pending, []
+        return out
+
+
+def make_engine(n_t, n_l, *, controller=None, bw_bps=50e6, seed=0):
+    grid = ChunkGrid(n_t=n_t, n_l=n_l, n_h=1)
+    chunks = list(grid.chunks())
+    bytes_map = {c: 2e5 for c in chunks}
+    active_map = {c: 40.0 for c in chunks}
+    t_pred = {c: 5e-3 for c in chunks}
+    bw = BandwidthIntegrator(np.full(5000, bw_bps), 0.01)
+    gt = GroundTruthLatency(PROFILE, CFG.resolved_head_dim)
+    return grid, HybridEngine(
+        grid=grid, chunk_bytes=bytes_map, active_blocks=active_map,
+        t_comp_pred=t_pred, gt=gt, profile=PROFILE, bw=bw, cfg_model=CFG,
+        controller=controller, seed=seed)
+
+
+def schedule_of(grid, *, comp=(), stream=()):
+    st = Stage(stream=list(stream), comp=list(comp))
+    return Schedule(stages=[st], grid=grid)
+
+
+def test_stream_to_compute_migration_executes():
+    c_target = Chunk(1, 1, 0)
+    ctrl = ScriptedController([Migration(c_target, "compute", "bw_drop")])
+    grid, eng = make_engine(2, 2, controller=ctrl)
+    # (0,1) streams first, so the target is still queued (not in flight)
+    # when the controller fires at the first completion boundary
+    sched = schedule_of(grid,
+                        comp=[Chunk(0, 0, 0), Chunk(1, 0, 0)],
+                        stream=[Chunk(0, 1, 0), Chunk(1, 1, 0)])
+    res = eng.run(sched, context_len=2048)
+    assert res.n_migrations == 1
+    assert c_target in res.computed_set
+    assert res.n_streamed + res.n_computed == grid.size
+
+
+def test_compute_to_stream_stranding_guard():
+    """(0,1) must NOT migrate to stream while its dependent (0,2) is
+    compute-assigned; (0,2) itself (no dependent) may migrate."""
+    strand = Migration(Chunk(0, 1, 0), "stream", "contention")
+    ok = Migration(Chunk(0, 2, 0), "stream", "contention")
+    ctrl = ScriptedController([strand, ok])
+    grid, eng = make_engine(1, 3, controller=ctrl)
+    sched = schedule_of(grid, comp=[Chunk(0, 0, 0), Chunk(0, 1, 0),
+                                    Chunk(0, 2, 0)])
+    res = eng.run(sched, context_len=1024)
+    assert res.n_migrations == 1
+    assert Chunk(0, 2, 0) in res.streamed_set        # migrated tail
+    assert Chunk(0, 1, 0) in res.computed_set        # guard held it back
+    assert res.n_streamed + res.n_computed == grid.size
+
+
+def test_starved_compute_falls_back_to_stream():
+    """A compute chunk whose layer dep was *streamed* can never become
+    ready; with nothing in flight the engine must re-path it to stream
+    instead of stalling."""
+    grid, eng = make_engine(1, 2)
+    sched = schedule_of(grid, stream=[Chunk(0, 0, 0)],
+                        comp=[Chunk(0, 1, 0)])
+    res = eng.run(sched, context_len=1024)
+    assert res.n_streamed == 2 and res.n_computed == 0
+    assert res.n_migrations == 0     # fallback is a re-path, not a decision
+
+
+def test_controller_decides_compute_pull_on_bandwidth_drop():
+    sp = SparKVConfig()
+    ctrl = RuntimeController(sp, plan_bw=100e6)
+    c0, c1 = Chunk(0, 0, 0), Chunk(1, 0, 0)
+    # terrible measured bandwidth: 1 KB delivered in the whole window
+    ctrl.record_stream(0.1, 1e3)
+    migr = ctrl.decide(0.1, stream_queue=[c0, c1], comp_queue=[],
+                       ready={c0, c1},
+                       chunk_bytes={c0: 5e6, c1: 5e6},
+                       t_comp_pred={c0: 1e-3, c1: 2e-3})
+    assert migr and all(m.to_path == "compute" for m in migr)
+    # cheapest-compute first
+    assert migr[0].chunk == c0
+
+
+def test_controller_decides_shed_on_compute_contention():
+    sp = SparKVConfig()
+    ctrl = RuntimeController(sp, plan_bw=100e6)
+    chunks = [Chunk(0, l, 0) for l in range(4)]
+    # compute running 3x slower than predicted
+    ctrl.record_compute(0.05, actual_s=0.03, predicted_s=0.01)
+    migr = ctrl.decide(0.05, stream_queue=[], comp_queue=chunks,
+                       ready=set(),
+                       chunk_bytes={c: 1e4 for c in chunks},
+                       t_comp_pred={c: 0.5 for c in chunks})
+    assert migr and all(m.to_path == "stream" for m in migr)
+    # tail-first: the last compute chunk sheds first
+    assert migr[0].chunk == chunks[-1]
+
+
+def test_migration_budget_bounded_per_window():
+    sp = SparKVConfig(max_migrations_per_stage=2)
+    ctrl = RuntimeController(sp, plan_bw=100e6)
+    chunks = [Chunk(0, l, 0) for l in range(8)]
+    ctrl.record_compute(0.05, actual_s=0.05, predicted_s=0.01)
+    migr = ctrl.decide(0.05, stream_queue=[], comp_queue=chunks,
+                       ready=set(), chunk_bytes={c: 1e4 for c in chunks},
+                       t_comp_pred={c: 0.5 for c in chunks})
+    assert len(migr) <= 2
+    # budget exhausted within the same window
+    assert ctrl.decide(0.06, stream_queue=[], comp_queue=chunks,
+                       ready=set(), chunk_bytes={c: 1e4 for c in chunks},
+                       t_comp_pred={c: 0.5 for c in chunks}) == []

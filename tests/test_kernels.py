@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dep: skip suite if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.compression.quantize import dequantize, quantize

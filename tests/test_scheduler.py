@@ -4,6 +4,7 @@ force on tiny instances; greedy is sandwiched between LP bound and naive
 baselines."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dep: skip suite if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.chunks import Chunk, ChunkGrid, State

@@ -62,3 +62,18 @@ def test_streamed_bitstreams_roundtrip_exactly(server):
 def test_utilization_tracking(server):
     srv, _, _ = server
     assert srv.utilization() == 0.0
+
+
+def test_serve_fleet_concurrent_contexts(server):
+    """Registered contexts submitted into the multi-request cluster."""
+    srv, cid, _ = server
+    jobs = [(cid, 0.0, "sparkv"), (cid, 0.0, "cachegen"),
+            (cid, 0.05, "local_prefill")]
+    rep = srv.serve_fleet(jobs, closed_loop=True)
+    assert len(rep.records) == 3
+    n = srv.contexts[cid].n_chunks
+    for r in rep.records:
+        assert r.n_streamed + r.n_computed == n
+        assert r.ttft_s > 0 and r.energy_j > 0
+    s = rep.summary()
+    assert s["goodput_rps"] > 0 and s["ttft_p50_s"] <= s["ttft_p99_s"]
