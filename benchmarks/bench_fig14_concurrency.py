@@ -9,6 +9,11 @@ Two utilization sources:
   - closed-loop (`closed_loop=True`): each level is N actually-concurrent
     requests in the serving cluster — utilization emerges from in-flight
     compute chunks and the shared link, not from a dial.
+
+The closed-loop mode additionally compares device scheduling disciplines
+on the explicit run queue (FIFO vs. WFQ with a weighted interactive class
+plus a background bulk load): per-request queue-wait breakdowns and the
+p99 TTFT divergence between disciplines under contention.
 """
 from __future__ import annotations
 
@@ -70,15 +75,55 @@ def _closed_loop_rows(cfg, context_len, levels_n):
     return rows
 
 
+def _discipline_rows(cfg, context_len, n_interactive):
+    """FIFO vs. WFQ on the explicit capacity-1 run queue: one background
+    bulk load (weight 1) + n weighted interactive requests (weight 8),
+    all sparkv so queue telemetry also drives migrations."""
+    from repro.core.costs import RunQueueModel
+    from repro.serving.cluster import RequestSpec, ServingCluster
+    spcfg = SparKVConfig(scheduler_mode="engine")
+    specs = [RequestSpec(arrival_s=0.0, context_len=2 * context_len,
+                         policy="sparkv", seed=0, weight=1.0)]
+    specs += [RequestSpec(arrival_s=0.3 * i, context_len=context_len,
+                          policy="sparkv", seed=i, weight=8.0)
+              for i in range(1, n_interactive + 1)]
+    rows = []
+    for disc in ("fifo", "wfq"):
+        rep = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
+                             max_concurrency=len(specs),
+                             run_queue=RunQueueModel(1, disc)).run(specs)
+        s = rep.summary()
+        shorts = [r.ttft_s for r in rep.records if r.spec.weight > 1]
+        rows.append({
+            "discipline": disc,
+            "ttft_p50_s": s["ttft_p50_s"],
+            "ttft_p99_s": s["ttft_p99_s"],
+            "interactive_p99_s": float(np.percentile(shorts, 99)),
+            "queue_wait_p50_s": s["queue_wait_p50_s"],
+            "queue_wait_p99_s": s["queue_wait_p99_s"],
+            "migrations": s["migrations_total"],
+        })
+    return rows
+
+
 def run(quick: bool = False, closed_loop: bool = False):
     cfg = get_config("sparkv-qwen3-4b")
     net = NETWORKS["campus-wifi"]
     rows = []
     if closed_loop:
         levels_n = [1, 2] if quick else [1, 2, 4, 8]
-        rows = _closed_loop_rows(cfg, 4096 if quick else 8192, levels_n)
+        ctx = 4096 if quick else 8192
+        rows = _closed_loop_rows(cfg, ctx, levels_n)
         title = "\n[Fig 14] concurrent-request contention (closed-loop N)"
+        disc_rows = _discipline_rows(cfg, 2048, 3 if quick else 5)
+        print(table(disc_rows, list(disc_rows[0].keys()),
+                    title="\n[Fig 14b] run-queue discipline: FIFO vs WFQ "
+                          "(background + weighted interactive)"))
+        p99 = {r["discipline"]: r["ttft_p99_s"] for r in disc_rows}
+        print(f"p99 TTFT divergence fifo vs wfq: "
+              f"{abs(p99['fifo'] - p99['wfq']) / max(p99.values()):.1%}")
     else:
+        disc_rows = []
         spcfg = SparKVConfig()
         wl = synthesize(cfg, 12_288, DATASETS["longchat"])
         levels = [0.0, 0.3, 0.6, 0.8]
@@ -87,7 +132,7 @@ def run(quick: bool = False, closed_loop: bool = False):
         title = "\n[Fig 14] concurrent-request contention"
     print(table(rows, list(rows[0].keys()), title=title))
     save("fig14_concurrency" + ("_closed_loop" if closed_loop else ""),
-         {"rows": rows})
+         {"rows": rows, "disciplines": disc_rows})
     return rows
 
 

@@ -1,20 +1,25 @@
 """Fleet traffic: N concurrent requests under Poisson/bursty arrivals.
 
-Runs the multi-request serving cluster (shared-link bandwidth arbiter +
-closed-loop compute contention) for each policy and reports fleet
-metrics: p50/p99 TTFT, goodput, energy per request, migrations. Also
-checks the two regressions the subsystem exists to express:
+Runs the multi-request serving cluster for each policy and reports fleet
+metrics: p50/p99 TTFT, goodput, energy per request, migrations, plus the
+per-request device queue-wait and uplink-share breakdowns from the
+resource-server layer. ``--discipline fifo|wfq`` switches the device
+server from the legacy closed-loop dilation to the explicit run queue.
+Also checks the regressions the subsystem exists to express:
 
   - link contention: aggregate per-request stream time under concurrency
     exceeds the single-request stream time;
   - closed-loop contention: migration counts differ from the static-util
-    path (the controller reacts to *actual* in-flight compute).
+    path (the controller reacts to *actual* in-flight compute);
+  - discipline sensitivity: FIFO and WFQ fleets report different tails
+    for a weighted interactive class.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.configs import SparKVConfig, get_config
+from repro.core.costs import RunQueueModel
 from repro.serving.cluster import ServingCluster
 from repro.serving.traffic import TrafficProfile, generate_trace
 
@@ -23,28 +28,32 @@ from benchmarks.common import save, table
 POLICIES = ["sparkv", "strong_hybrid", "local_prefill"]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, discipline: str | None = None):
     cfg = get_config("sparkv-qwen3-4b")
     spcfg = SparKVConfig(scheduler_mode="engine")
     n_req = 8 if quick else 16
     rate = 1.0 if quick else 0.8
     max_ctx = 4096 if quick else 8192
+    run_queue = RunQueueModel(2, discipline) if discipline else None
+    mode = f"run-queue/{discipline}" if discipline else "closed-loop"
     rows = []
     contention = {}
     for policy in POLICIES:
         prof = TrafficProfile(rate_rps=rate, arrival="poisson",
                               context_mix=(("longchat", 1.0),),
                               policy_mix=((policy, 1.0),),
-                              max_context=max_ctx)
+                              max_context=max_ctx,
+                              weight_mix=((1.0, 0.5), (8.0, 0.5)))
         specs = generate_trace(prof, n_req, seed=7)
         cluster = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
-                                 max_concurrency=8, closed_loop=True)
+                                 max_concurrency=8, closed_loop=True,
+                                 run_queue=run_queue)
         rep = cluster.run(specs)
         s = rep.summary()
         # single-request baseline on the same trace for the contention check
         solo = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
-                              max_concurrency=8, closed_loop=True
-                              ).run(specs[:1])
+                              max_concurrency=8, closed_loop=True,
+                              run_queue=run_queue).run(specs[:1])
         per_req_stream = s["stream_busy_total_s"] / max(s["n_done"], 1)
         contention[policy] = {
             "fleet_stream_per_req_s": per_req_stream,
@@ -59,10 +68,13 @@ def run(quick: bool = False):
             "J_per_req": s["energy_per_req_j"],
             "migrations": s["migrations_total"],
             "queue_mean_s": s["queue_mean_s"],
+            "qwait_p50_s": s["queue_wait_p50_s"],
+            "qwait_p99_s": s["queue_wait_p99_s"],
+            "uplink_share_p50": s["uplink_share_p50"],
         })
     print(table(rows, list(rows[0].keys()),
                 title=f"\n[fleet] {n_req} Poisson requests, shared link + "
-                      "closed-loop contention"))
+                      f"{mode} contention"))
 
     # closed-loop vs static-util migration comparison (sparkv only)
     prof = TrafficProfile(rate_rps=rate, arrival="poisson",
@@ -82,8 +94,8 @@ def run(quick: bool = False):
         print(f"stream-time {pol}: fleet/req {c['fleet_stream_per_req_s']:.3f}s"
               f" vs solo {c['solo_stream_s']:.3f}s")
 
-    save("fleet_traffic", {"rows": rows, "contention": contention,
-                           "migrations": migr})
+    save("fleet_traffic" + (f"_{discipline}" if discipline else ""),
+         {"rows": rows, "contention": contention, "migrations": migr})
     return rows
 
 
@@ -91,4 +103,8 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--discipline", choices=("fifo", "wfq"), default=None,
+                    help="use the explicit device run queue instead of "
+                         "closed-loop utilization coupling")
+    a = ap.parse_args()
+    run(quick=a.quick, discipline=a.discipline)

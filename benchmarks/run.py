@@ -31,6 +31,13 @@ def main():
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        known = [name for name, _ in BENCHES]
+        unknown = sorted(only - set(known))
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark name(s) in --only: {', '.join(unknown)}"
+                f"; registered: {', '.join(known)}")
 
     t_all = time.time()
     results = {}

@@ -1,14 +1,19 @@
 """Example: a fleet of concurrent context loads on one shared link.
 
 Generates a bursty arrival trace with a mixed policy population, runs it
-through the multi-request serving cluster (shared-link bandwidth arbiter
-+ closed-loop compute contention), and prints per-request and fleet
-metrics. Compare the same trace with contention coupling switched off
-(static util=0) to see what single-request modeling hides.
+through the multi-request serving cluster, and prints per-request and
+fleet metrics. Three device-contention models over the same trace:
+
+  - closed-loop: in-flight compute dilates everyone's service time;
+  - static util=0: contention coupling off (what single-request modeling
+    hides);
+  - WFQ run queue: compute *waits* in an explicit weighted-fair device
+    queue instead of dilating — queue-wait shows up in the breakdown.
 
   PYTHONPATH=src python examples/serve_fleet.py
 """
 from repro.configs import SparKVConfig, get_config
+from repro.core.costs import RunQueueModel
 from repro.serving.cluster import ServingCluster
 from repro.serving.traffic import TrafficProfile, generate_trace
 
@@ -28,7 +33,8 @@ print(f"trace: {len(specs)} requests over "
       f"{max(s.context_len for s in specs)} tokens")
 
 for mode, kw in [("closed-loop", dict(closed_loop=True)),
-                 ("static u=0 ", dict(closed_loop=False, static_util=0.0))]:
+                 ("static u=0 ", dict(closed_loop=False, static_util=0.0)),
+                 ("wfq queue  ", dict(run_queue=RunQueueModel(2, "wfq")))]:
     cluster = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
                              max_concurrency=4, **kw)
     rep = cluster.run(specs)
@@ -36,7 +42,8 @@ for mode, kw in [("closed-loop", dict(closed_loop=True)),
     print(f"\n[{mode}] p50 TTFT {s['ttft_p50_s']:.2f}s  "
           f"p99 {s['ttft_p99_s']:.2f}s  goodput {s['goodput_rps']:.2f} "
           f"req/s  {s['energy_per_req_j']:.0f} J/req  "
-          f"{s['migrations_total']} migrations")
+          f"{s['migrations_total']} migrations  "
+          f"queue-wait p99 {s['queue_wait_p99_s']:.2f}s")
     if mode == "closed-loop":
         print(f"{'rid':>3} {'policy':15s} {'arr':>6} {'queue':>6} "
               f"{'ttft':>7} {'str/cmp':>8} {'migr':>4}")

@@ -137,7 +137,11 @@ class RequestPlan:
     """Everything the engine needs to execute one request under a given
     policy — the planning half of a pipeline, without running it. Used by
     the multi-request cluster (repro.serving.cluster), which drives many
-    plans on one shared clock instead of calling the closed run_* loops."""
+    plans against shared resource servers (link topology + device run
+    queues) on one clock instead of calling the closed run_* loops. The
+    ``util`` the plan was built with is the predictor's U feature at
+    admission — the cluster sources it from live telemetry (queue
+    occupancy / in-flight compute), not a hand-set dial."""
     policy: str
     grid: ChunkGrid
     bytes_map: dict

@@ -11,6 +11,14 @@ bounded chunk migrations between the streaming and computation paths:
     migrated from the *tail* of the compute order to streaming (tail-first
     minimizes disturbance to imminent work).
 
+Compute contention is observed through two channels: service-time dilation
+(actual/predicted per chunk — the scalar-util world) and, when the cluster
+runs an explicit device run queue, *queueing delay* (wait/service per
+chunk, fed by the engine via ``record_queue_wait``). Queue pressure
+inflates the compute-path backlog estimate the same way slowdown does, so
+migration decisions respond to waiting work even when service times are
+undilated.
+
 Migrations per stage are bounded (spcfg.max_migrations_per_stage) to avoid
 oscillation.
 """
@@ -65,6 +73,7 @@ class RuntimeController:
         self.plan_bw = plan_bw
         self.bw_win = WindowStat(spcfg.window_s)         # bytes delivered
         self.comp_win = WindowStat(spcfg.window_s)       # actual/predicted
+        self.queue_win = WindowStat(spcfg.window_s)      # wait/service
         self.migrations_this_stage = 0
         self.n_migrations = 0
         self._last_reset = 0.0
@@ -74,6 +83,11 @@ class RuntimeController:
 
     def record_compute(self, t: float, actual_s: float, predicted_s: float):
         self.comp_win.add(t, actual_s / max(predicted_s, 1e-9))
+
+    def record_queue_wait(self, t: float, wait_s: float, service_s: float):
+        """Device run-queue wait observed for one compute chunk (engine
+        calls this when the driver acknowledged a queued start)."""
+        self.queue_win.add(t, wait_s / max(service_s, 1e-9))
 
     def new_stage(self):
         self.migrations_this_stage = 0
@@ -85,6 +99,12 @@ class RuntimeController:
     def compute_slowdown(self, now: float) -> float:
         r = self.comp_win.mean_ratio(now)
         return r if r else 1.0
+
+    def queue_pressure(self, now: float) -> float:
+        """Mean wait/service ratio in the window; 0 when the device queue
+        is idle (or the driver has no explicit queue)."""
+        r = self.queue_win.mean_ratio(now)
+        return r if r else 0.0
 
     def decide(self, now: float, *, stream_queue, comp_queue,
                ready, chunk_bytes, t_comp_pred) -> list[Migration]:
@@ -101,7 +121,9 @@ class RuntimeController:
         if self.migrations_this_stage >= cfg.max_migrations_per_stage:
             return []
         bw = self.measured_bw(now)
-        slow = self.compute_slowdown(now)
+        # queueing delay and service dilation both stretch the compute
+        # path; a chunk that waits w and runs s effectively costs s*(1+w/s)
+        slow = self.compute_slowdown(now) * (1.0 + self.queue_pressure(now))
         t_s = sum(chunk_bytes[c] for c in stream_queue) / bw \
             if stream_queue else 0.0
         t_c = sum(t_comp_pred[c] for c in comp_queue) * slow \

@@ -11,6 +11,11 @@ Two roles:
 
 Device profiles: the paper's edge platforms plus a TPU-v5e single-chip
 profile (our deployment target).
+
+Shared-resource models (:class:`SharedLinkModel`, :class:`RunQueueModel`)
+parameterize the serving layer's resource servers
+(``repro.serving.resources``): contention efficiency for fair-shared
+links, slot count + discipline for the explicit device run queue.
 """
 from __future__ import annotations
 
@@ -137,12 +142,43 @@ NETWORKS: dict[str, NetworkProfile] = {
     "campus-wifi": NetworkProfile("campus-wifi", 850e6 / 8, 264e6 / 8),
     # paper §VI: Wi-Fi 6 testbed end-to-end 0.64 Gbps
     "wifi6-cloud": NetworkProfile("wifi6-cloud", 640e6 / 8, 200e6 / 8),
-    # congested variants for Fig. 13
+    # congested variants for Fig. 13 (scalar stand-ins; the two-stage
+    # LinkTopology models the same scenarios structurally)
     "congested-2dev": NetworkProfile("congested-2dev", 760e6 / 8, 330e6 / 8),
     "congested-5dev": NetworkProfile("congested-5dev", 660e6 / 8, 470e6 / 8),
+    # per-device NIC / last-metre hop for two-stage topologies: a device
+    # radio is steadier than the contended AP uplink but not much faster,
+    # so with 1 flow the NIC bottlenecks and with >= 2 flows the shared
+    # uplink does — the crossover the Fig. 13 congested-AP study probes
+    "device-nic": NetworkProfile("device-nic", 600e6 / 8, 60e6 / 8,
+                                 corr_tau_s=1.5),
     # datacenter-ish for the TPU profile
     "dcn-25g": NetworkProfile("dcn-25g", 25e9 / 8, 2e9 / 8, corr_tau_s=0.2),
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class RunQueueModel:
+    """Configuration of the explicit device run queue (the queueing
+    counterpart of :class:`SharedLinkModel`): ``capacity`` parallel
+    service slots and a scheduling ``discipline``:
+
+      - ``"fifo"`` — jobs start in global submission order;
+      - ``"wfq"``  — weighted fair queueing across request flows (a flow
+        with weight w gets a ~w-proportional share of device time under
+        backlog).
+
+    Consumed by ``repro.serving.resources.DeviceRunQueue``. When a
+    cluster runs with a RunQueueModel, compute contention is expressed as
+    *waiting* (queueing delay) instead of the scalar ``util`` dilation of
+    :meth:`GroundTruthLatency.attn_seconds` — the engine then receives
+    util 0 for fleet-internal contention."""
+    capacity: int = 1
+    discipline: str = "fifo"
+
+    def __post_init__(self):
+        assert self.capacity >= 1, self.capacity
+        assert self.discipline in ("fifo", "wfq"), self.discipline
 
 
 # ---------------------------------------------------------------------------

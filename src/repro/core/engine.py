@@ -15,15 +15,32 @@ Two driving modes:
 
   - ``run(schedule)`` — the classic closed loop: this request owns the
     whole ``BandwidthIntegrator`` and the device, and the engine advances
-    its own clock (single-request semantics, unchanged).
+    its own clock (single-request semantics, unchanged). Semantically it
+    is a capacity-1 device with an always-idle run queue.
   - ``session(schedule)`` — an event-yielding coroutine stepped by an
-    *external* clock (``repro.serving.cluster.ServingCluster``). The engine
-    yields :class:`StreamStart` / :class:`ComputeStart` requests and a
-    :class:`Wait` marker; the driver owns all timing and resumes the
-    generator with :class:`Completion` events. This is what lets N
-    concurrent requests share one link (bandwidth arbiter) and couple
-    their compute latencies (closed-loop utilization) — ``run()`` is now
-    just the trivial single-request driver of the same coroutine.
+    *external* clock (``repro.serving.cluster.ServingCluster``). The
+    protocol, per yield:
+
+      * :class:`StreamStart`  — engine asks for a network transfer; the
+        driver maps it onto a link server (single arbiter or multi-stage
+        :class:`repro.serving.resources.LinkTopology`) and replies None.
+      * :class:`ComputeStart` — engine asks for device service. This is a
+        *queue-admission* step, not an implied immediate start: the driver
+        replies with a :class:`StartAck` whose ``t_start`` is the service
+        start time, or ``StartAck(None)`` when the job went into an
+        explicit device run queue (``repro.serving.resources.
+        DeviceRunQueue``) and will start later. A plain ``None`` reply is
+        the legacy immediate-start shorthand (what ``run()`` sends).
+      * :class:`Wait` — engine has nothing more to start; the driver must
+        resume the generator with this request's next :class:`Completion`
+        (whose ``t_start`` is the actual service start, so queue wait is
+        observable as ``t_start - submit time``).
+
+    Controller bookkeeping follows the ack: an immediate start records the
+    compute sample at yield time (bit-compatible with PR 1); a queued
+    start defers the record to the completion, stamped with the *actual*
+    service interval, and additionally feeds the controller's queue-wait
+    telemetry.
 """
 from __future__ import annotations
 
@@ -62,12 +79,15 @@ class EngineResult:
     streamed_set: set
     computed_set: set
     bytes_streamed: float
+    compute_wait_s: float = 0.0   # total device run-queue wait observed
+    n_compute_queued: int = 0     # compute chunks that did not start at once
 
     def breakdown(self) -> dict:
         return {
             "transmission_s": self.stream_busy_s - self.proc_busy_s,
             "decode_proc_s": self.proc_busy_s,
             "compute_s": self.compute_busy_s,
+            "queue_wait_s": self.compute_wait_s,
             "ttft_s": self.ttft_s,
         }
 
@@ -78,18 +98,44 @@ class BandwidthIntegrator:
     def __init__(self, trace: np.ndarray, dt: float):
         self.dt = dt
         self.cum = np.concatenate([[0.0], np.cumsum(trace) * dt])
+        self._grid: Optional[np.ndarray] = None   # lazy (at_many only)
 
     def bytes_between(self, t0: float, t1: float) -> float:
         return self._at(t1) - self._at(t0)
+
+    @property
+    def tail_bw(self) -> float:
+        """Constant extrapolation rate beyond the trace end (mean of the
+        trace tail)."""
+        return (self.cum[-1] - self.cum[max(len(self.cum) - 100, 0)]) \
+            / (self.dt * min(99, len(self.cum) - 1))
+
+    @property
+    def grid_end_s(self) -> float:
+        """Last instant covered by the trace itself (extrapolated after)."""
+        return (len(self.cum) - 1) * self.dt
+
+    def at_many(self, t: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`_at`: cumulative bytes at each time in `t`,
+        with the same piecewise-linear interpolation and tail
+        extrapolation (multi-stage link topologies integrate over many
+        cell boundaries at once)."""
+        if self._grid is None:
+            self._grid = np.arange(len(self.cum)) * self.dt
+        out = np.interp(t, self._grid, self.cum)
+        over = t > self._grid[-1]
+        if np.any(over):
+            out = np.where(over,
+                           self.cum[-1] + (t - self._grid[-1]) * self.tail_bw,
+                           out)
+        return out
 
     def _at(self, t: float) -> float:
         i = t / self.dt
         i0 = int(np.floor(i))
         if i0 >= len(self.cum) - 1:
             # extrapolate with the mean of the tail
-            tail_bw = (self.cum[-1] - self.cum[max(len(self.cum) - 100, 0)]) \
-                / (self.dt * min(99, len(self.cum) - 1))
-            return self.cum[-1] + (t - (len(self.cum) - 1) * self.dt) * tail_bw
+            return self.cum[-1] + (t - self.grid_end_s) * self.tail_bw
         return self.cum[i0] + (i - i0) * (self.cum[i0 + 1] - self.cum[i0])
 
     def finish_time(self, t0: float, nbytes: float, *,
@@ -154,11 +200,23 @@ class StreamStart:
 
 @dataclasses.dataclass(frozen=True)
 class ComputeStart:
-    """Engine starts computing `chunk`; `duration_s` is the ground-truth
-    latency already inflated by the utilization the driver supplied via
-    `util_fn` (closed-loop) or the static `util` fallback."""
+    """Engine requests device service for `chunk`; `duration_s` is the
+    ground-truth latency already inflated by the utilization the driver
+    supplied via `util_fn` (closed-loop) or the static `util` fallback —
+    drivers with an explicit run queue supply util 0 and model contention
+    as queueing delay instead. The driver acknowledges with a
+    :class:`StartAck` (or None = started now, legacy)."""
     chunk: Chunk
     duration_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class StartAck:
+    """Driver's reply to :class:`ComputeStart`. ``t_start`` is the service
+    start time; ``None`` means the job was queued on the device server and
+    will start later (the engine learns the actual start from the
+    eventual :class:`Completion.t_start`)."""
+    t_start: Optional[float]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,6 +290,10 @@ class HybridEngine:
         stream_busy = comp_busy = proc_busy = bytes_streamed = 0.0
         streamed_set, computed_set = set(), set()
         n_migr = 0
+        compute_wait = 0.0
+        n_queued = 0
+        submit_t: dict[Chunk, float] = {}     # compute admission times
+        deferred: set[Chunk] = set()          # queued: record at completion
 
         def ready_set():
             return {c for c in comp_q if g.compute_ready(c, state)}
@@ -263,13 +325,20 @@ class HybridEngine:
                 if started is not None:
                     u = util_fn() if util_fn is not None else None
                     dt = self._t_comp_actual(started, rng, u)
-                    yield ComputeStart(started, dt)
+                    ack = yield ComputeStart(started, dt)
                     dev_busy = True
                     inflight += 1
                     comp_busy += dt
-                    if self.controller:
+                    submit_t[started] = now
+                    if isinstance(ack, StartAck) and ack.t_start is None:
+                        # queued on the device server: the actual service
+                        # interval arrives with the Completion
+                        deferred.add(started)
+                    elif self.controller:
+                        t0 = ack.t_start if isinstance(ack, StartAck) \
+                            else now
                         self.controller.record_compute(
-                            now + dt, dt, self.t_comp_pred[started])
+                            t0 + dt, dt, self.t_comp_pred[started])
                     progressed = True
             if inflight == 0:
                 if not progressed:
@@ -299,6 +368,18 @@ class HybridEngine:
                 dev_busy = False
                 state[i] = State.COMPUTED
                 computed_set.add(c)
+                if c in deferred:
+                    deferred.discard(c)
+                    wait = max(ev.t_start - submit_t.get(c, ev.t_start),
+                               0.0)
+                    compute_wait += wait
+                    n_queued += 1
+                    if self.controller:
+                        service = max(ev.t_end - ev.t_start, 1e-9)
+                        self.controller.record_compute(
+                            ev.t_end, service, self.t_comp_pred[c])
+                        self.controller.record_queue_wait(
+                            ev.t_end, wait, service)
             done += 1
             # controller migrations at event boundary
             if self.controller is not None:
@@ -336,7 +417,8 @@ class HybridEngine:
             n_migrations=n_migr, stream_busy_s=stream_busy,
             compute_busy_s=comp_busy, proc_busy_s=proc_busy,
             timeline=timeline, streamed_set=streamed_set,
-            computed_set=computed_set, bytes_streamed=bytes_streamed)
+            computed_set=computed_set, bytes_streamed=bytes_streamed,
+            compute_wait_s=compute_wait, n_compute_queued=n_queued)
 
     # ------------------------------------------------------------------
     # Classic single-request driver (exclusive link + device)

@@ -7,6 +7,13 @@ profiled constant (t_proj); dense ops are a near-constant offset t_dense.
 
 Trained offline with SGD + MSE on 6,000 samples, 80/20 split (paper
 settings). The analytical roofline estimator is the baseline it beats.
+
+The U feature's *source* depends on the serving mode: the paper (and the
+static Fig. 14 path) hand-sets it; the legacy closed-loop cluster derives
+it from concurrently in-flight compute; a cluster with an explicit device
+run queue derives it from observed queue occupancy via
+:func:`queue_utilization` — the nvidia-smi-style "how busy is the device"
+signal that an explicit queue exposes directly.
 """
 from __future__ import annotations
 
@@ -18,6 +25,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costs import DeviceProfile, GroundTruthLatency
+
+
+def queue_utilization(load: int, capacity: int, *,
+                      cap: float = 0.95) -> float:
+    """Map device run-queue occupancy (in-service + waiting jobs) to the
+    predictor's U feature.
+
+    The MLP is trained on fractional utilization in [0, 0.85]; with an
+    explicit :class:`repro.serving.resources.DeviceRunQueue` the
+    equivalent admission-time signal is occupancy normalized by service
+    slots, clipped below 1 so the planning costs stay finite."""
+    return min(load / max(capacity, 1), cap)
 
 
 def _init_mlp(rng, sizes=(3, 48, 24, 1)):

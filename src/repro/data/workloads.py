@@ -14,6 +14,7 @@ context length and modality mix shift the sparsity/entropy distributions
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -160,10 +161,19 @@ def sample_profiling_features(rng: np.random.Generator, n: int,
 
 def lm_token_batch(rng: np.random.Generator, vocab: int, batch: int,
                    seq: int, *, motif_len: int = 64,
-                   n_motifs: int = 32) -> np.ndarray:
+                   n_motifs: int = 32,
+                   motif_seed: Optional[int] = None) -> np.ndarray:
     """Synthetic LM training data with repeated motifs (compressible,
-    non-trivial loss curve)."""
-    motifs = rng.integers(0, vocab, size=(n_motifs, motif_len))
+    non-trivial loss curve).
+
+    ``motif_seed`` pins the motif bank independently of ``rng``: a training
+    loop that draws a fresh ``rng`` per step must pass it, otherwise every
+    step sees brand-new motifs and the only learnable structure is the
+    (uniform) unigram distribution — loss then never improves.
+    """
+    motif_rng = (np.random.default_rng(motif_seed)
+                 if motif_seed is not None else rng)
+    motifs = motif_rng.integers(0, vocab, size=(n_motifs, motif_len))
     out = np.empty((batch, seq), np.int64)
     for b in range(batch):
         pos = 0

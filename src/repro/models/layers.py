@@ -486,7 +486,12 @@ def moe_block_sharded(cfg, p, x, rules):
         decode vs ~27 GB/step of weight gathers on the 235B config) and
         the f-partial down-projection psums over data.
     """
-    from jax import shard_map
+    try:
+        from jax import shard_map
+        sm_kw = {"check_vma": False}
+    except ImportError:                      # jax < 0.5: experimental API
+        from jax.experimental.shard_map import shard_map
+        sm_kw = {"check_rep": False}
     from jax.sharding import PartitionSpec as P
 
     mo = cfg.moe
@@ -603,6 +608,6 @@ def moe_block_sharded(cfg, p, x, rules):
         in_specs=(P(data_axes, None, None), P(None, None),
                   w_up_spec, w_up_spec, w_dn_spec),
         out_specs=(P(data_axes, None, None), P()),
-        check_vma=False,
+        **sm_kw,
     )(x, p["router"], p["w_up"], p["w_gate"], p["w_down"])
     return y, aux

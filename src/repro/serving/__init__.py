@@ -1,8 +1,13 @@
 """Serving layer: single-request server, multi-request cluster, traffic.
 
-- ``engine``  — SparKVServer: concrete context registration + per-request
+- ``engine``    — SparKVServer: concrete context registration + per-request
   loading/decoding (real compression round-trip, real logit checks).
-- ``cluster`` — ServingCluster: N concurrent loads on one clock with a
-  shared-link bandwidth arbiter and closed-loop compute contention.
-- ``traffic`` — arrival processes and request mixes for fleet runs.
+- ``resources`` — generic discrete-event resource servers: fluid link
+  stages/topologies (per-device NIC -> shared uplink) and the explicit
+  FIFO/WFQ device run queue.
+- ``cluster``   — ServingCluster: N concurrent loads on one clock, driving
+  the resource servers (link topology + per-device run queues or the
+  legacy closed-loop utilization coupling).
+- ``traffic``   — arrival processes, request mixes, device routing and
+  WFQ weight classes for fleet runs.
 """

@@ -1,39 +1,55 @@
-"""Multi-request serving cluster: shared-link arbitration + contention
-coupling on one discrete-event clock.
+"""Multi-request serving cluster on explicit resource servers.
 
 The single-request engine (`repro.core.engine.HybridEngine.run`) models a
 device that owns the whole NIC and sees contention only as a static `util`
 scalar. This module runs **N concurrent context loads** against shared
-resources:
+resource *servers* (``repro.serving.resources``) on one discrete-event
+clock:
 
-  - :class:`SharedLinkArbiter` — fair-shares one ``BandwidthIntegrator``
-    trace across all in-flight streams. Per-flow goodput is
-    ``trace(t) * eta(n) / n`` (``repro.core.costs.SharedLinkModel``), so
-    two concurrent streams measurably slow each other; with one flow the
-    arbiter reproduces exclusive-link semantics bit-for-bit.
-  - **closed-loop utilization** — each request's ground-truth compute
-    latency is inflated by the *actual* number of in-flight compute chunks
-    (``util = n_other_computing / capacity``), replacing the hand-set
-    `util` scalar; the same figure feeds the latency predictor's U feature
-    at admission time. SparKV's runtime controller therefore observes real
-    contention and migrates accordingly.
+  - **link servers** — a :class:`LinkTopology` drains each request's
+    transfers through its path of fair-shared stages. The default is the
+    single shared uplink (PR 1's :class:`SharedLinkArbiter`, now the
+    degenerate one-stage topology); with ``n_devices > 1`` and a ``nic``
+    profile the topology is the paper's Fig. 13 shape — per-device NIC
+    stages feeding one congested AP uplink, the bottleneck stage governing
+    each flow's rate.
+  - **device servers** — compute contention has two modes. Legacy
+    closed-loop: in-flight compute dilates everyone's service time
+    (``util = n_other_computing / capacity`` into
+    ``GroundTruthLatency.attn_seconds``). Run-queue mode (pass a
+    ``repro.core.costs.RunQueueModel``): chunks are admitted to an
+    explicit per-device :class:`DeviceRunQueue` (FIFO or WFQ) and *wait*
+    when the ``capacity`` service slots are busy — attn_seconds no longer
+    consumes a fleet-contention util; queueing delay is the contention.
+    The engine observes admission through the session protocol's
+    :class:`StartAck` and reports per-request queue waits.
+  - **telemetry** — the latency predictor's U feature at admission comes
+    from the live device server (queue occupancy via
+    ``predictor.queue_utilization`` in run-queue mode, in-flight compute
+    in closed-loop mode); the runtime controller additionally receives
+    per-chunk queue waits and folds them into migration decisions.
   - **admission queue** — at most ``max_concurrency`` requests are in
-    service; arrivals beyond that wait FIFO. Per-request policy comes from
-    the :class:`RequestSpec` (or a ``policy_fn`` override at admission).
+    service; arrivals beyond that wait FIFO. Per-request policy comes
+    from the :class:`RequestSpec`, or from a ``policy_fn`` override at
+    admission — :func:`telemetry_policy` is the default telemetry-driven
+    chooser (sparkv vs. local_prefill from live link share and queue
+    depth).
 
 Protocol with the engine: each admitted request holds an
-``HybridEngine.session`` generator. The cluster resumes a session only at
-that request's own completion events; sessions yield ``StreamStart`` /
-``ComputeStart`` requests which the cluster maps onto the arbiter and the
-event heap. See ``repro.core.engine`` for the event dataclasses.
+``HybridEngine.session`` generator; the cluster resumes a session only at
+that request's own completion events. Sessions yield ``StreamStart`` /
+``ComputeStart`` requests which the cluster maps onto the link topology
+and the device servers, acknowledging compute admissions with
+``StartAck`` (immediate or queued). See ``repro.core.engine``.
 
-Fleet metrics: p50/p99 TTFT (arrival -> first token), goodput (completed
-requests per second of makespan), energy per request, migration counts.
+Fleet metrics: p50/p99 TTFT (arrival -> first token), goodput, energy per
+request, migrations, and per-request queue-wait / uplink-share breakdowns.
 
 Typical use::
 
     specs = poisson_trace(...)                      # repro.serving.traffic
-    cluster = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi")
+    cluster = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
+                             run_queue=RunQueueModel(2, "wfq"))
     report = cluster.run(specs)
     print(report.summary())
 """
@@ -48,71 +64,34 @@ import numpy as np
 from repro.core import baselines as B
 from repro.core.chunks import Chunk
 from repro.core.costs import (GroundTruthLatency, NetworkProfile, PROFILES,
-                              NETWORKS, SharedLinkModel)
+                              NETWORKS, RunQueueModel, SharedLinkModel)
 from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
-                               HybridEngine, StreamStart, Wait,
+                               HybridEngine, StartAck, StreamStart, Wait,
                                decode_first_token_seconds)
+from repro.core.predictor import queue_utilization
 from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
+from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
+                                     nic_uplink_topology, single_link)
 
 
 # ---------------------------------------------------------------------------
-# Shared-link bandwidth arbiter
+# Shared-link bandwidth arbiter (degenerate one-stage topology)
 # ---------------------------------------------------------------------------
 
 
-class SharedLinkArbiter:
-    """Fair-share scheduler over one cumulative-bandwidth trace.
-
-    Active flows split the instantaneous link capacity equally, scaled by
-    the aggregate contention efficiency ``eta(n)`` of the link model. The
-    active set is piecewise-constant between cluster events: the cluster
-    always advances time to the earliest of (heap event, earliest flow
-    completion), so :meth:`advance` only ever integrates over intervals
-    with a fixed membership.
-    """
+class SharedLinkArbiter(LinkTopology):
+    """Fair-share scheduler over one cumulative-bandwidth trace — PR 1's
+    arbiter, now the single-stage case of :class:`LinkTopology`: active
+    flows split the instantaneous capacity equally, scaled by the link
+    model's aggregate efficiency ``eta(n)``. Kept as a named class for
+    callers that want exactly one shared hop."""
 
     def __init__(self, integrator: BandwidthIntegrator,
                  link: Optional[SharedLinkModel] = None):
+        super().__init__({"uplink": LinkStage("uplink", integrator, link)},
+                         default_path=("uplink",))
         self.bw = integrator
         self.link = link
-        self.t = 0.0
-        self._rem: dict[int, float] = {}      # flow key -> bytes left
-
-    def n_active(self) -> int:
-        return len(self._rem)
-
-    def _fraction(self) -> float:
-        n = len(self._rem)
-        if n == 0:
-            return 1.0
-        eta = self.link.aggregate_efficiency(n) if self.link else 1.0
-        return eta / n
-
-    def advance(self, t: float) -> None:
-        """Integrate deliveries over [self.t, t] (constant active set)."""
-        if t <= self.t:
-            return
-        if self._rem:
-            share = self.bw.bytes_between(self.t, t) * self._fraction()
-            for k in self._rem:
-                self._rem[k] = max(self._rem[k] - share, 0.0)
-        self.t = t
-
-    def add(self, key: int, nbytes: float) -> None:
-        assert key not in self._rem, f"flow {key} already active"
-        self._rem[key] = float(nbytes)
-
-    def complete(self, key: int) -> None:
-        del self._rem[key]
-
-    def next_completion(self) -> Optional[tuple[float, int]]:
-        """(t_done, key) of the earliest flow to finish if the active set
-        stays fixed — with equal shares that is the min-remaining flow."""
-        if not self._rem:
-            return None
-        key, rem = min(self._rem.items(), key=lambda kv: (kv[1], kv[0]))
-        need_on_link = rem / self._fraction()
-        return self.bw.finish_time(self.t, need_on_link), key
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +108,8 @@ class RequestSpec:
     policy: str = "sparkv"
     seed: int = 0
     wl: Optional[WorkloadChunks] = None     # overrides synthesis if given
+    device: int = 0                         # which device serves it
+    weight: float = 1.0                     # WFQ share of device time
 
 
 @dataclasses.dataclass
@@ -140,7 +121,7 @@ class RequestRecord:
     context_done_s: float                   # all chunks assembled
     done_s: float                           # context assembled + first token
     ttft_s: float                           # done_s - arrival_s (incl. queue)
-    queue_s: float
+    queue_s: float                          # admission-queue wait
     energy_j: float
     quality: float
     n_streamed: int
@@ -149,6 +130,9 @@ class RequestRecord:
     stream_busy_s: float
     compute_busy_s: float
     bytes_streamed: float
+    compute_wait_s: float = 0.0             # device run-queue wait (total)
+    n_compute_queued: int = 0
+    uplink_share: float = 1.0               # mean uplink fraction received
 
 
 @dataclasses.dataclass
@@ -176,21 +160,59 @@ class FleetReport:
     def summary(self) -> dict:
         t = self.ttfts()
         done = len(self.records)
+        nan = float("nan")
+
+        def pct(vals, q):
+            return float(np.percentile(np.asarray(vals), q)) if done else nan
+
+        waits = [r.compute_wait_s for r in self.records]
+        shares = [r.uplink_share for r in self.records]
         return {
             "n_done": done,
-            "ttft_p50_s": float(np.percentile(t, 50)) if done else float("nan"),
-            "ttft_p99_s": float(np.percentile(t, 99)) if done else float("nan"),
-            "ttft_mean_s": float(t.mean()) if done else float("nan"),
+            "ttft_p50_s": pct(t, 50),
+            "ttft_p99_s": pct(t, 99),
+            "ttft_mean_s": float(t.mean()) if done else nan,
             "goodput_rps": done / self.makespan_s if self.makespan_s else 0.0,
             "energy_per_req_j": float(np.mean([r.energy_j
                                                for r in self.records]))
-            if done else float("nan"),
+            if done else nan,
             "migrations_total": sum(r.n_migrations for r in self.records),
             "stream_busy_total_s": sum(r.stream_busy_s
                                        for r in self.records),
             "queue_mean_s": float(np.mean([r.queue_s for r in self.records]))
-            if done else float("nan"),
+            if done else nan,
+            # device run-queue wait + uplink share breakdowns (per request)
+            "queue_wait_p50_s": pct(waits, 50),
+            "queue_wait_p99_s": pct(waits, 99),
+            "queue_wait_mean_s": float(np.mean(waits)) if done else nan,
+            "uplink_share_p50": pct(shares, 50),
+            "uplink_share_p99": pct(shares, 99),
         }
+
+
+# ---------------------------------------------------------------------------
+# Telemetry-driven admission policy
+# ---------------------------------------------------------------------------
+
+
+def telemetry_policy(spec: RequestSpec, cluster: "ServingCluster",
+                     *, bw_floor_frac: float = 0.4) -> str:
+    """Default ``policy_fn``: pick sparkv vs. local_prefill from the live
+    resource servers at admission time.
+
+    The hybrid planner's advantage evaporates when its streaming path is
+    a fiction: if the projected per-flow uplink share (profiled mean
+    bandwidth x fair-share fraction with this flow added) falls below
+    ``bw_floor_frac`` of the exclusive-link bandwidth *and* the device
+    server still has slack for this request's compute, loading locally
+    dominates. Otherwise run the sparkv planner, which keeps migrating
+    at runtime anyway."""
+    n_flows = cluster.active_flows()
+    frac = cluster.link.per_flow_fraction(n_flows + 1) if cluster.link \
+        else 1.0 / (n_flows + 1)
+    link_starved = frac < bw_floor_frac
+    device_slack = cluster.device_load(spec.device) < cluster.capacity
+    return "local_prefill" if link_starved and device_slack else "sparkv"
 
 
 # ---------------------------------------------------------------------------
@@ -205,16 +227,30 @@ class ServingCluster:
     ----------
     cfg, spcfg : model / SparKV configs shared by all requests.
     profile, network : device profile name and network profile (name or
-        ``NetworkProfile``) — one shared device, one shared link.
-    capacity : compute slots used to normalize closed-loop utilization
-        (``util = n_other_inflight_compute / capacity``).
+        ``NetworkProfile``) — the shared uplink trace is drawn from
+        ``network``.
+    capacity : compute slots per device. Run-queue mode serves at most
+        this many chunks concurrently per device; closed-loop mode uses
+        it to normalize utilization.
     max_concurrency : admission limit; excess arrivals queue FIFO.
-    closed_loop : couple compute latency to actual in-flight compute; when
-        False every request sees the hand-set ``static_util`` (the legacy
-        Fig. 14 mode).
-    link : ``SharedLinkModel`` for contention overhead; ``None`` disables
-        the overhead term but still fair-shares the trace.
-    bw_trace / bw_dt : optional explicit bandwidth trace (otherwise an OU
+    run_queue : a ``RunQueueModel`` switches the device server to the
+        explicit run queue (FIFO/WFQ; ``run_queue.capacity`` overrides
+        ``capacity``). Fleet compute contention is then queueing delay —
+        ``attn_seconds`` receives only ``static_util`` (external, non-
+        fleet load), never a fleet-derived scalar.
+    closed_loop : (legacy mode, ignored under ``run_queue``) couple
+        compute latency to actual in-flight compute; when False every
+        request sees the hand-set ``static_util`` (Fig. 14 static mode).
+    link : ``SharedLinkModel`` for uplink contention overhead; ``None``
+        selects the default ``SharedLinkModel(network)`` (5%-per-flow
+        overhead). For ideal overhead-free fair sharing pass
+        ``SharedLinkModel(net, contention_overhead=0.0)`` explicitly.
+    n_devices, nic, nic_link : with ``nic`` set (a ``NetworkProfile`` or
+        name), each device gets its own NIC stage feeding the shared
+        uplink (two-stage topology); requests route via
+        ``RequestSpec.device``. ``n_devices == 1`` with ``nic=None`` is
+        the single-stage PR 1 semantics, bit-for-bit.
+    bw_trace / bw_dt : optional explicit uplink trace (otherwise an OU
         trace is drawn from the network profile with ``bw_seed``).
     """
 
@@ -223,6 +259,9 @@ class ServingCluster:
                  max_concurrency: int = 8, closed_loop: bool = True,
                  static_util: float = 0.0,
                  link: Optional[SharedLinkModel] = None,
+                 run_queue: Optional[RunQueueModel] = None,
+                 n_devices: int = 1, nic=None,
+                 nic_link: Optional[SharedLinkModel] = None,
                  policy_fn: Optional[Callable] = None,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
                  bw_seed: int = 991, seed: int = 0):
@@ -232,26 +271,86 @@ class ServingCluster:
         self.profile = PROFILES[profile]
         self.net: NetworkProfile = (NETWORKS[network]
                                     if isinstance(network, str) else network)
-        self.capacity = capacity
+        self.capacity = run_queue.capacity if run_queue else capacity
         self.max_concurrency = max_concurrency
         self.closed_loop = closed_loop
         self.static_util = static_util
         self.link = link if link is not None else SharedLinkModel(self.net)
+        self.run_queue = run_queue
+        self.n_devices = n_devices
+        self.nic: Optional[NetworkProfile] = (
+            NETWORKS[nic] if isinstance(nic, str) else nic)
+        self.nic_link = nic_link
         self.policy_fn = policy_fn
         self.bw_trace = bw_trace
         self.bw_dt = bw_dt
         self.bw_seed = bw_seed
         self.seed = seed
+        # live-server handles (populated by run(); telemetry surface for
+        # policy_fn callbacks)
+        self._link_server: Optional[LinkTopology] = None
+        self._run_queues: dict[int, DeviceRunQueue] = {}
+        self._computing: dict[int, set] = {}
 
-    # ---- closed-loop contention ----
-    def _coupled_util(self) -> float:
+    # ---- telemetry surface (valid during run()) ----
+    @property
+    def link_server(self) -> Optional[LinkTopology]:
+        return self._link_server
+
+    def active_flows(self) -> int:
+        return self._link_server.n_active() if self._link_server else 0
+
+    def device_load(self, device: int = 0) -> int:
+        """In-service + waiting compute jobs on `device` (run-queue mode)
+        or in-flight computing requests (closed-loop mode)."""
+        if self.run_queue is not None:
+            rq = self._run_queues.get(device)
+            return rq.load() if rq else 0
+        return len(self._computing.get(device, ()))
+
+    # ---- contention signals ----
+    def _coupled_util(self, device: int) -> float:
+        """Legacy dilation signal fed to attn_seconds while computing."""
+        if self.run_queue is not None:
+            # explicit queueing replaces fleet-internal dilation entirely;
+            # static_util stays available for external (non-fleet) load
+            return self.static_util
         if not self.closed_loop:
             return self.static_util
-        return min(len(self._computing) / max(self.capacity, 1), 0.95)
+        return min(len(self._computing.get(device, ()))
+                   / max(self.capacity, 1), 0.95)
+
+    def _admission_util(self, device: int) -> float:
+        """The predictor's U feature for planning at admission time."""
+        if self.run_queue is not None:
+            return queue_utilization(self.device_load(device), self.capacity)
+        return self._coupled_util(device)
+
+    # ---- topology construction ----
+    def _build_link_server(self, integrator: BandwidthIntegrator
+                           ) -> LinkTopology:
+        if self.nic is None:
+            return single_link(integrator, self.link)
+        horizon_s = (len(integrator.cum) - 1) * integrator.dt
+        nics = []
+        for d in range(self.n_devices):
+            rng = np.random.default_rng(self.bw_seed + 7919 * (d + 1))
+            trace = self.nic.trace(rng, horizon_s, self.bw_dt)
+            nics.append(BandwidthIntegrator(trace, self.bw_dt))
+        return nic_uplink_topology(nics, integrator,
+                                   uplink_link=self.link,
+                                   nic_link=self.nic_link)
+
+    def _flow_path(self, device: int) -> tuple:
+        if self.nic is None:
+            return ("uplink",)
+        return (f"nic{device}", "uplink")
 
     # ---- main loop ----
     def run(self, specs: list[RequestSpec]) -> FleetReport:
         specs = sorted(specs, key=lambda s: s.arrival_s)
+        assert all(0 <= s.device < self.n_devices for s in specs), \
+            f"request device out of range [0, {self.n_devices})"
         wls = [s.wl if s.wl is not None
                else synthesize(self.cfg, s.context_len,
                                DATASETS[s.dataset],
@@ -268,9 +367,13 @@ class ServingCluster:
         else:
             trace = self.bw_trace
         integrator = BandwidthIntegrator(trace, self.bw_dt)
-        arbiter = SharedLinkArbiter(integrator, self.link)
+        link_server = self._build_link_server(integrator)
+        self._link_server = link_server
+        self._computing = {d: set() for d in range(self.n_devices)}
+        self._run_queues = {
+            d: DeviceRunQueue(self.capacity, self.run_queue.discipline)
+            for d in range(self.n_devices)} if self.run_queue else {}
 
-        self._computing: set[int] = set()
         active: dict[int, _ActiveRequest] = {}
         queue: list[tuple[int, RequestSpec]] = []
         records: list[RequestRecord] = []
@@ -284,10 +387,16 @@ class ServingCluster:
         now = 0.0
         makespan = 0.0
 
+        def push_compute(rid: int, chunk: Chunk, t0: float, dur: float):
+            nonlocal seq
+            heapq.heappush(heap, (t0 + dur, seq, "compute_done", rid,
+                                  (chunk, t0)))
+            seq += 1
+
         def drive(st: _ActiveRequest, reply=None, *, prime: bool = False):
             """Advance one session until it parks (Wait) or finishes.
             Returns the EngineResult when the session completed, else None."""
-            nonlocal seq
+            dev = st.spec.device
             try:
                 ev = next(st.gen) if prime else st.gen.send(reply)
                 while True:
@@ -295,15 +404,23 @@ class ServingCluster:
                         st.stream_chunk = ev.chunk
                         st.stream_t0 = now
                         st.stream_t_proc = ev.t_proc
-                        arbiter.add(st.rid, ev.nbytes)
+                        link_server.add(st.rid, ev.nbytes,
+                                        path=self._flow_path(dev))
                         ev = st.gen.send(None)
                     elif isinstance(ev, ComputeStart):
-                        self._computing.add(st.rid)
-                        heapq.heappush(heap, (now + ev.duration_s, seq,
-                                              "compute_done", st.rid,
-                                              (ev.chunk, now)))
-                        seq += 1
-                        ev = st.gen.send(None)
+                        if self.run_queue is not None:
+                            t0 = self._run_queues[dev].submit(
+                                (st.rid, ev.chunk), ev.duration_s, now,
+                                flow=st.rid, weight=st.spec.weight)
+                            if t0 is not None:
+                                push_compute(st.rid, ev.chunk, t0,
+                                             ev.duration_s)
+                            ev = st.gen.send(StartAck(t0))
+                        else:
+                            self._computing[dev].add(st.rid)
+                            push_compute(st.rid, ev.chunk, now,
+                                         ev.duration_s)
+                            ev = st.gen.send(StartAck(now))
                     else:
                         assert isinstance(ev, Wait)
                         return None
@@ -311,13 +428,12 @@ class ServingCluster:
                 return stop.value
 
         def admit(rid: int, spec: RequestSpec):
-            nonlocal seq
             policy = spec.policy
             if self.policy_fn is not None:
                 policy = self.policy_fn(spec, self)
             plan = B.plan_policy(policy, self.cfg, wls[rid],
                                  self.profile_name, self.net, self.spcfg,
-                                 util=self._coupled_util())
+                                 util=self._admission_util(spec.device))
             gt = GroundTruthLatency(
                 self.profile, self.cfg.resolved_head_dim
                 if self.cfg.num_heads else 64)
@@ -335,7 +451,8 @@ class ServingCluster:
                                     plan.schedule,
                                     context_len=plan.context_len,
                                     t_start=now,
-                                    util_fn=self._coupled_util),
+                                    util_fn=lambda d=spec.device:
+                                        self._coupled_util(d)),
                                 admit_s=now)
             active[rid] = st
             res = drive(st, prime=True)
@@ -345,7 +462,7 @@ class ServingCluster:
         def finalize(st: _ActiveRequest, res):
             nonlocal makespan
             active.pop(st.rid)
-            self._computing.discard(st.rid)
+            self._computing[st.spec.device].discard(st.rid)
             quality = B._mixed_quality(res, st.plan.quality_bits)
             records.append(RequestRecord(
                 rid=st.rid, spec=st.spec, policy=st.plan.policy,
@@ -358,23 +475,26 @@ class ServingCluster:
                 n_migrations=res.n_migrations,
                 stream_busy_s=res.stream_busy_s,
                 compute_busy_s=res.compute_busy_s,
-                bytes_streamed=res.bytes_streamed))
+                bytes_streamed=res.bytes_streamed,
+                compute_wait_s=res.compute_wait_s,
+                n_compute_queued=res.n_compute_queued,
+                uplink_share=link_server.mean_share(st.rid)))
             makespan = max(makespan, res.ttft_s)
             if queue:
                 admit(*queue.pop(0))
 
         guard = 0
         limit = 1000 + 200 * sum(w.n_t * w.n_l * max(w.n_h, 1) for w in wls)
-        while heap or arbiter.n_active():
+        while heap or link_server.n_active():
             guard += 1
             if guard > limit:
                 raise RuntimeError("cluster livelock")
-            nc = arbiter.next_completion()
+            nc = link_server.next_completion()
             t_heap = heap[0][0] if heap else float("inf")
             if nc is not None and nc[0] <= t_heap:
                 t_done, rid = nc
-                arbiter.advance(t_done)
-                arbiter.complete(rid)
+                link_server.advance(t_done)
+                link_server.complete(rid)
                 now = t_done
                 st = active[rid]
                 # decode+dequant tail happens on-device after the transfer
@@ -386,7 +506,7 @@ class ServingCluster:
             if not heap:
                 break
             t, _, kind, rid, payload = heapq.heappop(heap)
-            arbiter.advance(t)
+            link_server.advance(t)
             now = t
             if kind == "arrival":
                 if len(active) < self.max_concurrency:
@@ -395,8 +515,14 @@ class ServingCluster:
                     queue.append((rid, payload))
             elif kind == "compute_done":
                 chunk, t0 = payload
-                self._computing.discard(rid)
                 st = active[rid]
+                if self.run_queue is not None:
+                    started = self._run_queues[st.spec.device].complete(
+                        (rid, chunk), t)
+                    for (rid2, chunk2), t02, dur2 in started:
+                        push_compute(rid2, chunk2, t02, dur2)
+                else:
+                    self._computing[st.spec.device].discard(rid)
                 res = drive(st, Completion("compute", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
@@ -408,5 +534,10 @@ class ServingCluster:
                 if res is not None:
                     finalize(st, res)
         assert not active and not queue, "cluster finished with stuck work"
+        # clear the whole telemetry surface so a reused cluster never
+        # exposes one run's end-state to the next run's policy_fn
+        self._link_server = None
+        self._run_queues = {}
+        self._computing = {}
         return FleetReport(records=sorted(records, key=lambda r: r.rid),
                            makespan_s=makespan, n_arrived=len(specs))

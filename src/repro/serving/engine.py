@@ -223,14 +223,19 @@ class SparKVServer:
     def serve_fleet(self, jobs: list[tuple[int, float, str]], *,
                     closed_loop: bool = True, static_util: float = 0.0,
                     max_concurrency: Optional[int] = None,
-                    link=None, bw_seed: int = 991):
+                    link=None, run_queue=None, policy_fn=None,
+                    bw_seed: int = 991):
         """Serve many registered contexts concurrently on one clock.
 
         jobs: (cid, arrival_s, policy) triples over contexts previously
         created with register_context(). Timing/energy come from the
-        multi-request cluster (shared-link arbiter + contention-coupled
-        engines); KV content for any request can still be assembled
-        afterwards with load_context(). Returns a FleetReport.
+        multi-request cluster (link topology + device servers); KV
+        content for any request can still be assembled afterwards with
+        load_context(). Pass a ``repro.core.costs.RunQueueModel`` as
+        ``run_queue`` to serve compute through the explicit FIFO/WFQ
+        device queue, and/or a ``policy_fn`` (e.g.
+        ``repro.serving.cluster.telemetry_policy``) to pick policies from
+        live telemetry at admission. Returns a FleetReport.
         """
         from repro.serving.cluster import RequestSpec, ServingCluster
         specs = []
@@ -244,7 +249,8 @@ class SparKVServer:
             capacity=self.capacity,
             max_concurrency=max_concurrency or self.capacity,
             closed_loop=closed_loop, static_util=static_util,
-            link=link, bw_seed=bw_seed, seed=self.seed)
+            link=link, run_queue=run_queue, policy_fn=policy_fn,
+            bw_seed=bw_seed, seed=self.seed)
         return cluster.run(specs)
 
     def _decode(self, st: StoredContext, cache, prompt, max_new):

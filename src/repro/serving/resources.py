@@ -1,0 +1,374 @@
+"""Generic discrete-event resource servers for the serving layer.
+
+Both shared resources of the cluster — the wireless link(s) and the
+accelerator — are expressed as *servers* with one driving protocol:
+
+    submit work        add(key, demand) / submit(key, duration, t)
+    peek next event    next_completion() -> (t, key) | None
+    advance the clock  advance(t)   (fluid servers integrate deliveries)
+    retire work        complete(key[, t])
+
+Two families:
+
+- :class:`LinkTopology` — a *fluid* server network: flows drain
+  byte-demands through a path of :class:`LinkStage` s (each a bandwidth
+  trace fair-shared under a ``repro.core.costs.SharedLinkModel``).  A
+  flow's instantaneous rate is the minimum of its per-stage shares, so a
+  per-device NIC feeding a congested AP uplink (the paper's Fig. 13
+  scenario) is two stages on the flow's path.  A single-stage topology is
+  exactly PR 1's ``SharedLinkArbiter`` (which is now a subclass).
+
+- :class:`DeviceRunQueue` — a *slotted* server: compute jobs occupy one
+  of ``capacity`` service slots for a fixed duration; excess jobs wait in
+  an explicit queue under a FIFO or weighted-fair (WFQ) discipline.  This
+  replaces the scalar ``util`` dilation: concurrent chunks *wait*, they
+  don't mutually stretch.  Queue depth / waits are the telemetry that
+  feeds the latency predictor's U feature and the runtime controller.
+
+All servers are deterministic given their inputs; time is the cluster's
+virtual clock (seconds).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.costs import SharedLinkModel
+from repro.core.engine import BandwidthIntegrator, LinkStarvedError
+
+
+# ---------------------------------------------------------------------------
+# Fluid link servers
+# ---------------------------------------------------------------------------
+
+
+class LinkStage:
+    """One arbitrated hop: a bandwidth trace fair-shared among the flows
+    currently crossing it, with contention efficiency ``eta(n)`` from the
+    link model (``None`` -> ideal fair sharing)."""
+
+    def __init__(self, name: str, integrator: BandwidthIntegrator,
+                 link: Optional[SharedLinkModel] = None):
+        self.name = name
+        self.bw = integrator
+        self.link = link
+        self.active: set = set()
+
+    def fraction(self) -> float:
+        """Per-flow fraction of the instantaneous trace capacity."""
+        n = len(self.active)
+        if n == 0:
+            return 1.0
+        eta = self.link.aggregate_efficiency(n) if self.link else 1.0
+        return eta / n
+
+
+class LinkTopology:
+    """Composable multi-stage link server (fluid-flow approximation).
+
+    Every flow carries a byte demand along a fixed ``path`` of stages;
+    within an interval where the active sets are constant the flow drains
+    at ``min_s(trace_s(t) * fraction_s)`` — the bottleneck stage governs.
+    The cluster guarantees piecewise-constant membership by always
+    advancing to the earliest of (next heap event, earliest completion).
+
+    With one stage per path this reduces *exactly* to the PR 1 shared-link
+    arbiter: same cumulative-trace integral, same fair share, same
+    completion search.  Per-flow share telemetry on the **last** stage of
+    the path (the shared uplink by convention) is accumulated for fleet
+    reporting (:meth:`mean_share`).
+    """
+
+    def __init__(self, stages: dict[str, LinkStage],
+                 default_path: Optional[Sequence[str]] = None):
+        assert stages, "topology needs at least one stage"
+        dts = {st.bw.dt for st in stages.values()}
+        assert len(dts) == 1, f"stage traces must share one dt, got {dts}"
+        self.stages = stages
+        self.default_path = tuple(default_path) if default_path \
+            else (next(iter(stages)),)
+        self.t = 0.0
+        self._rem: dict = {}                 # flow key -> bytes left
+        self._path: dict = {}                # flow key -> tuple[str, ...]
+        # share telemetry (never cleared on complete): key -> sums
+        self._share_time: dict = {}
+        self._active_time: dict = {}
+
+    # ---- membership ----
+    def n_active(self) -> int:
+        return len(self._rem)
+
+    def add(self, key, nbytes: float,
+            path: Optional[Sequence[str]] = None) -> None:
+        assert key not in self._rem, f"flow {key} already active"
+        p = tuple(path) if path else self.default_path
+        for s in p:
+            self.stages[s].active.add(key)
+        self._rem[key] = float(nbytes)
+        self._path[key] = p
+
+    def complete(self, key) -> None:
+        for s in self._path.pop(key):
+            self.stages[s].active.discard(key)
+        del self._rem[key]
+
+    # ---- integration ----
+    def _delivered(self, path: tuple, t0: float, t1: float) -> float:
+        """Bytes a flow on `path` drains over [t0, t1] with the *current*
+        active sets. Exact: per-stage rates are constant within each trace
+        cell, so the min-rate is integrated cell by cell; beyond the last
+        stage grid every stage extrapolates at a constant rate, so the
+        tail is integrated analytically (never enumerated — a starved
+        link searched out to the 1e5 s horizon must stay cheap)."""
+        sts = [self.stages[s] for s in path]
+        if len(sts) == 1:
+            return sts[0].bw.bytes_between(t0, t1) * sts[0].fraction()
+        fr = np.array([s.fraction() for s in sts])
+        dt = sts[0].bw.dt
+        t_gmax = max(s.bw.grid_end_s for s in sts)
+        total = 0.0
+        if t1 > t_gmax:
+            tail_span = t1 - max(t0, t_gmax)
+            total += tail_span * min(s.bw.tail_bw * f
+                                     for s, f in zip(sts, fr))
+            t1 = max(t0, t_gmax)
+        if t1 > t0:
+            k0, k1 = int(np.floor(t0 / dt)), int(np.ceil(t1 / dt))
+            bounds = np.unique(np.concatenate(
+                [[t0, t1], np.arange(k0 + 1, k1) * dt]))
+            bounds = bounds[(bounds >= t0) & (bounds <= t1)]
+            per_stage = np.stack([s.bw.at_many(bounds)
+                                  for s in sts])                    # (S, B)
+            deliv = np.diff(per_stage, axis=1) * fr[:, None]        # (S, B-1)
+            total += float(np.min(deliv, axis=0).sum())
+        return total
+
+    def advance(self, t: float) -> None:
+        """Integrate all flows over [self.t, t] (constant active sets)."""
+        if t <= self.t:
+            return
+        span = t - self.t
+        for key in self._rem:
+            got = self._delivered(self._path[key], self.t, t)
+            self._rem[key] = max(self._rem[key] - got, 0.0)
+            last = self.stages[self._path[key][-1]]
+            self._share_time[key] = self._share_time.get(key, 0.0) \
+                + last.fraction() * span
+            self._active_time[key] = self._active_time.get(key, 0.0) + span
+        self.t = t
+
+    # ---- completion search ----
+    def _finish(self, key) -> float:
+        rem, path = self._rem[key], self._path[key]
+        if rem <= 0:
+            return self.t
+        sts = [self.stages[s] for s in path]
+        if len(sts) == 1:
+            return sts[0].bw.finish_time(self.t, rem / sts[0].fraction())
+        # multi-stage: bisect on the exact piecewise-linear integral
+        max_horizon_s = 1e5
+        lo, hi = self.t, self.t + 1e-3
+        while self._delivered(path, self.t, hi) < rem:
+            hi = self.t + (hi - self.t) * 2
+            if hi - self.t > max_horizon_s:
+                break
+        if self._delivered(path, self.t, hi) < rem:
+            raise LinkStarvedError(
+                f"link starved on path {path}: {rem:.0f} B not "
+                f"deliverable within {max_horizon_s:.0f}s of t={self.t:.3f}")
+        for _ in range(60):
+            mid = 0.5 * (lo + hi)
+            if self._delivered(path, self.t, mid) < rem:
+                lo = mid
+            else:
+                hi = mid
+        return hi
+
+    def next_completion(self) -> Optional[tuple]:
+        """(t_done, key) of the earliest flow to finish if the active sets
+        stay fixed."""
+        if not self._rem:
+            return None
+        paths = set(self._path.values())
+        if len(paths) == 1 and len(next(iter(paths))) == 1:
+            # all flows share one single-stage path -> equal shares, so
+            # the min-remaining flow provably finishes first: one search
+            # instead of one per flow (the arbiter-era fast path)
+            key = min(self._rem, key=lambda k: (self._rem[k], k))
+            return self._finish(key), key
+        # keys must be mutually orderable (the cluster uses int rids)
+        best = min((self._finish(k), k) for k in self._rem)
+        return best
+
+    # ---- telemetry ----
+    def mean_share(self, key) -> float:
+        """Time-averaged fraction of the flow's last-stage (uplink)
+        capacity it received while active; 1.0 if it never waited on a
+        shared interval."""
+        at = self._active_time.get(key, 0.0)
+        if at <= 0:
+            return 1.0
+        return self._share_time[key] / at
+
+
+def single_link(integrator: BandwidthIntegrator,
+                link: Optional[SharedLinkModel] = None,
+                name: str = "uplink") -> LinkTopology:
+    """The degenerate one-stage topology (== PR 1 SharedLinkArbiter)."""
+    return LinkTopology({name: LinkStage(name, integrator, link)},
+                        default_path=(name,))
+
+
+def nic_uplink_topology(nic_integrators: Sequence[BandwidthIntegrator],
+                        uplink_integrator: BandwidthIntegrator,
+                        uplink_link: Optional[SharedLinkModel] = None,
+                        nic_link: Optional[SharedLinkModel] = None
+                        ) -> LinkTopology:
+    """Two-stage tree: per-device NIC stages feeding one shared AP
+    uplink. Device d's flows take path ("nic{d}", "uplink")."""
+    stages = {f"nic{d}": LinkStage(f"nic{d}", bw, nic_link)
+              for d, bw in enumerate(nic_integrators)}
+    stages["uplink"] = LinkStage("uplink", uplink_integrator, uplink_link)
+    return LinkTopology(stages, default_path=("uplink",))
+
+
+# ---------------------------------------------------------------------------
+# Slotted device server
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _QueuedJob:
+    key: object
+    duration_s: float
+    flow: object
+    weight: float
+    t_submit: float
+    seq: int
+
+
+class DeviceRunQueue:
+    """Explicit accelerator run queue with ``capacity`` service slots.
+
+    Jobs (compute chunks) are submitted with a fixed service duration; a
+    job either starts immediately (a slot is free) or waits. Disciplines:
+
+    - ``"fifo"``  — global submit order;
+    - ``"wfq"``   — weighted fair queueing: among queued jobs, start the
+      one whose *flow* has the least weight-normalized attained service.
+      On submit a flow's attained service is floored to a few quanta
+      behind the least-served *active* flow, so a newcomer (or a flow
+      returning from a long idle/streaming stretch) competes from now
+      instead of replaying its absence as credit and starving veterans;
+      the grace margin is wide enough that a continuously-competing
+      flow's earned advantage (bounded by ~one quantum) is never clawed
+      back. A flow with weight w receives a ~w-proportional share of
+      device time under backlog (capped by the engine's one-outstanding-
+      chunk-per-request protocol at capacity/(capacity+1)-ish shares);
+      ties break by submit order.
+
+    The protocol mirrors the fluid servers: ``submit`` returns the start
+    time (or ``None`` if queued), ``complete(key, t)`` frees the slot and
+    returns the jobs that start as a result. ``next_completion()`` is the
+    earliest in-service finish. ``load()`` / ``depth()`` / ``waits`` are
+    the telemetry surface (predictor U feature, controller pressure,
+    fleet reports).
+    """
+
+    def __init__(self, capacity: int = 1, discipline: str = "fifo"):
+        assert capacity >= 1
+        assert discipline in ("fifo", "wfq"), discipline
+        self.capacity = capacity
+        self.discipline = discipline
+        self._queue: list[_QueuedJob] = []
+        self._running: dict = {}             # key -> (t_end, job)
+        self._attained: dict = {}            # flow -> attained service
+        self._vtime = 0.0                    # SFQ virtual time (start tags)
+        self._seq = 0
+        self.waits: list[float] = []         # per-job start - submit
+        self.busy_s = 0.0
+
+    # ---- telemetry ----
+    def depth(self) -> int:
+        """Jobs waiting (not in service)."""
+        return len(self._queue)
+
+    def in_service(self) -> int:
+        return len(self._running)
+
+    def load(self) -> int:
+        """Occupancy: in-service + waiting jobs."""
+        return len(self._queue) + len(self._running)
+
+    # ---- protocol ----
+    def submit(self, key, duration_s: float, t: float, *,
+               flow=None, weight: float = 1.0) -> Optional[float]:
+        """Returns the start time if the job enters service now, else
+        None (it waits; the driver learns the start via complete())."""
+        assert weight > 0
+        f = key if flow is None else flow
+        if self.discipline == "wfq":
+            # fairness floor: re-enter no more than ~3 quanta behind the
+            # least-served active flow, so idle time is not banked as
+            # credit (an unfloored newcomer would monopolize the server
+            # until it caught up with the veterans' attained service)
+            floor = (self._active_min_norm()
+                     - 3.0 * float(duration_s) / weight) * weight
+            self._attained[f] = max(self._attained.get(f, 0.0), floor)
+        job = _QueuedJob(key=key, duration_s=float(duration_s),
+                         flow=f, weight=weight, t_submit=t, seq=self._seq)
+        self._seq += 1
+        self._queue.append(job)
+        started = self._dispatch(t)
+        for k, t0, _ in started:
+            if k == key:
+                return t0
+        return None
+
+    def _active_min_norm(self) -> float:
+        """Least weight-normalized attained service among flows with a
+        job queued or in service; the last dispatch's level when idle."""
+        jobs = list(self._queue) + [job for _, job in self._running.values()]
+        if not jobs:
+            return self._vtime
+        return min(self._attained.get(j.flow, 0.0) / j.weight
+                   for j in jobs)
+
+    def _pick(self) -> int:
+        if self.discipline == "fifo":
+            return 0                         # queue is in submit order
+        return min(range(len(self._queue)), key=lambda i: (
+            self._attained.get(self._queue[i].flow, 0.0)
+            / self._queue[i].weight,
+            self._queue[i].seq))
+
+    def _dispatch(self, t: float) -> list[tuple]:
+        """Fill free slots; returns [(key, t_start, duration_s), ...]."""
+        started = []
+        while self._queue and len(self._running) < self.capacity:
+            job = self._queue.pop(self._pick())
+            self.waits.append(t - job.t_submit)
+            self._vtime = max(self._vtime,
+                              self._attained.get(job.flow, 0.0)
+                              / job.weight)
+            self._attained[job.flow] = \
+                self._attained.get(job.flow, 0.0) + job.duration_s
+            self._running[job.key] = (t + job.duration_s, job)
+            self.busy_s += job.duration_s
+            started.append((job.key, t, job.duration_s))
+        return started
+
+    def next_completion(self) -> Optional[tuple]:
+        if not self._running:
+            return None
+        key = min(self._running,
+                  key=lambda k: (self._running[k][0],
+                                 self._running[k][1].seq))
+        return self._running[key][0], key
+
+    def complete(self, key, t: float) -> list[tuple]:
+        """Retire an in-service job; returns newly started jobs."""
+        del self._running[key]
+        return self._dispatch(t)

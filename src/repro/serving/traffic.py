@@ -13,7 +13,10 @@ Produces ``RequestSpec`` lists for ``repro.serving.cluster``:
 Request mixes draw context lengths per dataset profile (rounded to whole
 chunks) and policies from a weighted table, so one trace can interleave
 sparkv / strong_hybrid / local_prefill requests the way a real fleet
-mixes device capabilities.
+mixes device capabilities. For the resource-server cluster, traces can
+also spread requests over ``n_devices`` (round-robin — the two-stage
+NIC/uplink topology routes per device) and draw per-request WFQ weights
+from ``weight_mix`` (interactive vs. background service classes).
 """
 from __future__ import annotations
 
@@ -41,6 +44,9 @@ class TrafficProfile:
     min_context: int = 2048
     max_context: int = 16384
     chunk_tokens: int = 1024
+    # resource-server routing
+    n_devices: int = 1                  # round-robin device assignment
+    weight_mix: tuple = ((1.0, 1.0),)   # (wfq weight, draw weight)
 
 
 def _arrival_times(profile: TrafficProfile, n: int,
@@ -80,6 +86,9 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
     """Draw `n_requests` specs: arrival times + per-request mix."""
     rng = rng or np.random.default_rng(seed)
     arrivals = _arrival_times(profile, n_requests, rng)
+    wfq_weights = [w for w, _ in profile.weight_mix]
+    wfq_p = np.array([v for _, v in profile.weight_mix], float)
+    wfq_p /= wfq_p.sum()
     specs = []
     for i, t in enumerate(arrivals):
         ds_name = _weighted(profile.context_mix, rng)
@@ -88,9 +97,11 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
         raw = float(np.clip(raw, profile.min_context, profile.max_context))
         ctx = max(profile.chunk_tokens,
                   int(raw // profile.chunk_tokens) * profile.chunk_tokens)
+        wfq_w = float(wfq_weights[rng.choice(len(wfq_weights), p=wfq_p)])
         specs.append(RequestSpec(
             arrival_s=float(t), context_len=ctx, dataset=ds_name,
-            policy=_weighted(profile.policy_mix, rng), seed=seed + i))
+            policy=_weighted(profile.policy_mix, rng), seed=seed + i,
+            device=i % max(profile.n_devices, 1), weight=wfq_w))
     return specs
 
 

@@ -107,7 +107,8 @@ def data_batch(cfg: ModelConfig, tcfg: TrainConfig, step: int,
                            size=(batch, cfg.dec_len + 1))
         return {"frames": jnp.asarray(frames, jnp.bfloat16),
                 "dec_tokens": jnp.asarray(dec, jnp.int32)}
-    toks = lm_token_batch(rng, cfg.vocab_size, batch, seq + 1)
+    toks = lm_token_batch(rng, cfg.vocab_size, batch, seq + 1,
+                          motif_seed=tcfg.seed)
     return {"tokens": jnp.asarray(toks, jnp.int32)}
 
 

@@ -1,15 +1,18 @@
 """Multi-request serving cluster: arbiter fair-sharing, contention
-coupling, admission queueing, and single-request equivalence."""
+coupling, admission queueing, single-request equivalence, run-queue
+disciplines, two-stage topologies and telemetry-driven policy."""
 import numpy as np
 import pytest
 
 from repro.configs import SparKVConfig, get_config
 from repro.core import baselines as B
-from repro.core.costs import NETWORKS, SharedLinkModel
+from repro.core.costs import NETWORKS, RunQueueModel, SharedLinkModel
 from repro.core.engine import BandwidthIntegrator, LinkStarvedError
 from repro.data.workloads import DATASETS, synthesize
 from repro.serving.cluster import (FleetReport, RequestSpec,
-                                   ServingCluster, SharedLinkArbiter)
+                                   ServingCluster, SharedLinkArbiter,
+                                   telemetry_policy)
+from repro.serving.resources import DeviceRunQueue, single_link
 from repro.serving.traffic import TrafficProfile, generate_trace
 
 CFG = get_config("sparkv-qwen3-4b")
@@ -150,3 +153,122 @@ def test_deterministic_given_seeds():
     a = make_cluster().run(specs).summary()
     b = make_cluster().run(specs).summary()
     assert a == b
+
+
+# ---------------------------------------------------------------------------
+# explicit device run queue
+# ---------------------------------------------------------------------------
+
+def test_idle_runqueue_matches_classic_run():
+    """Degenerate parity: a single request on a capacity-1 FIFO run queue
+    never waits, so the cluster must reproduce HybridEngine.run() exactly
+    (rtol 1e-5) — the run-queue protocol adds no timing skew."""
+    wl = synthesize(CFG, CTX, DATASETS["triviaqa"],
+                    chunk_tokens=SP.chunk_tokens, quant_bits=SP.quant_bits)
+    seed = 0
+    total = sum(float(wl.chunk_bytes[t, l].sum())
+                for t in range(wl.n_t) for l in range(wl.n_l))
+    horizon = max(20.0, 4 * total / NET.mean_bw + 10)
+    trace = NET.trace(np.random.default_rng(seed + 991), horizon)
+    for policy in ("strong_hybrid", "sparkv"):
+        ref = B.PIPELINES[policy](CFG, wl, "jetson-orin", NET, SP, seed=seed)
+        rep = make_cluster(closed_loop=False, static_util=0.0,
+                           run_queue=RunQueueModel(1, "fifo"),
+                           bw_trace=trace, seed=seed).run(
+            [RequestSpec(arrival_s=0.0, policy=policy, seed=0, wl=wl)])
+        r = rep.records[0]
+        assert r.n_streamed == ref.engine.n_streamed, policy
+        assert r.n_computed == ref.engine.n_computed, policy
+        assert np.isclose(r.ttft_s, ref.ttft_s, rtol=1e-5), policy
+        assert np.isclose(r.energy_j, ref.energy_j, rtol=1e-5), policy
+        assert r.compute_wait_s == 0.0 and r.n_compute_queued == 0
+
+
+def test_runqueue_contention_waits_not_dilates():
+    """Concurrent compute-bound requests on a capacity-1 run queue wait
+    in the explicit queue; the report's queue-wait breakdown captures it."""
+    specs = [RequestSpec(arrival_s=0.0, context_len=CTX,
+                         policy="local_prefill", seed=i) for i in range(3)]
+    rep = make_cluster(run_queue=RunQueueModel(1, "fifo")).run(specs)
+    s = rep.summary()
+    assert s["queue_wait_p99_s"] > 0
+    assert sum(r.n_compute_queued for r in rep.records) > 0
+    # legacy closed loop has no run queue: wait breakdown is identically 0
+    s0 = make_cluster(closed_loop=True).run(specs).summary()
+    assert s0["queue_wait_p99_s"] == 0.0 and s0["queue_wait_mean_s"] == 0.0
+
+
+def test_fifo_vs_wfq_changes_tail_latency():
+    """Acceptance: the scheduling discipline is observable end-to-end —
+    a weighted interactive class plus a background bulk load produce
+    different p99 TTFT (and better interactive tails under WFQ)."""
+    specs = [RequestSpec(arrival_s=0.0, context_len=8192,
+                         policy="sparkv", seed=0, weight=1.0)]
+    specs += [RequestSpec(arrival_s=0.3 * i, context_len=2048,
+                          policy="sparkv", seed=i, weight=8.0)
+              for i in range(1, 6)]
+    out = {}
+    for disc in ("fifo", "wfq"):
+        rep = make_cluster(run_queue=RunQueueModel(1, disc)).run(specs)
+        shorts = [r.ttft_s for r in rep.records if r.spec.weight > 1]
+        out[disc] = (rep.summary()["ttft_p99_s"],
+                     float(np.percentile(shorts, 99)))
+    p99_f, int_f = out["fifo"]
+    p99_w, int_w = out["wfq"]
+    assert abs(p99_f - p99_w) / max(p99_f, p99_w) > 0.005
+    assert int_w < int_f * 0.99          # WFQ protects the weighted class
+
+
+# ---------------------------------------------------------------------------
+# two-stage NIC -> uplink topology
+# ---------------------------------------------------------------------------
+
+def test_two_stage_topology_end_to_end():
+    specs = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="cachegen",
+                         seed=i, device=i) for i in range(3)]
+    rep = make_cluster(n_devices=3, nic="device-nic").run(specs)
+    assert len(rep.records) == 3
+    # three flows share the uplink: mean share must reflect contention
+    assert all(r.uplink_share < 1.0 for r in rep.records)
+    # NIC stage caps the single-flow rate: slower than the same fleet on
+    # the bare uplink (deterministic given seeds)
+    solo = make_cluster().run(specs[:1]).records[0]
+    nic_solo = make_cluster(n_devices=1, nic="device-nic").run(
+        [specs[0]]).records[0]
+    assert nic_solo.stream_busy_s > solo.stream_busy_s
+
+
+def test_device_out_of_range_rejected():
+    with pytest.raises(AssertionError):
+        make_cluster(n_devices=2).run(
+            [RequestSpec(arrival_s=0.0, context_len=CTX, device=5)])
+
+
+# ---------------------------------------------------------------------------
+# telemetry-driven admission policy
+# ---------------------------------------------------------------------------
+
+def test_telemetry_policy_reads_live_servers():
+    cl = make_cluster(run_queue=RunQueueModel(2, "fifo"))
+    bw = BandwidthIntegrator(np.full(1000, 100e6), 0.01)
+    cl._link_server = single_link(bw, cl.link)
+    cl._run_queues = {0: DeviceRunQueue(2, "fifo")}
+    spec = RequestSpec(arrival_s=0.0)
+    assert telemetry_policy(spec, cl) == "sparkv"          # idle link
+    for i in range(4):                                     # contended link
+        cl._link_server.add(i, 1e6)
+    assert telemetry_policy(spec, cl) == "local_prefill"
+    for j in range(3):                                     # busy device too
+        cl._run_queues[0].submit(("x", j), 1.0, 0.0)
+    assert telemetry_policy(spec, cl) == "sparkv"
+
+
+def test_telemetry_policy_end_to_end_mixes_fleet():
+    specs = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                         seed=i) for i in range(6)]
+    rep = make_cluster(run_queue=RunQueueModel(4, "fifo"),
+                       policy_fn=telemetry_policy).run(specs)
+    pols = [r.policy for r in rep.records]
+    assert pols[0] == "sparkv"                  # first admit sees idle link
+    assert "local_prefill" in pols              # later admits see contention
+    assert len(rep.records) == 6

@@ -7,6 +7,7 @@ starved-compute fallback (engine moves dependency-dead compute chunks to
 the always-feasible stream path).
 """
 import numpy as np
+import pytest
 
 from repro.configs import SparKVConfig, get_config
 from repro.core.chunks import Chunk, ChunkGrid
@@ -126,6 +127,31 @@ def test_controller_decides_shed_on_compute_contention():
     assert migr and all(m.to_path == "stream" for m in migr)
     # tail-first: the last compute chunk sheds first
     assert migr[0].chunk == chunks[-1]
+
+
+def test_queue_pressure_triggers_shed():
+    """Queue waits alone (undilated service) must push the compute-path
+    estimate over the shed threshold: waiting work is a bottleneck even
+    when each chunk runs exactly as predicted."""
+    sp = SparKVConfig()
+    chunks = [Chunk(0, l, 0) for l in range(4)]
+    s_chunks = [Chunk(1, l, 0) for l in range(2)]
+    # measured bw falls back to plan_bw (100 MB/s): stream backlog 2e8 B
+    # -> t_s = 2.0 s, exactly balancing the 4 x 0.5 s compute backlog
+    kw = dict(stream_queue=s_chunks, comp_queue=chunks, ready=set(),
+              chunk_bytes={**{c: 1e4 for c in chunks},
+                           **{c: 1e8 for c in s_chunks}},
+              t_comp_pred={**{c: 0.5 for c in chunks},
+                           **{c: 0.1 for c in s_chunks}})
+    base = RuntimeController(sp, plan_bw=100e6)
+    base.record_compute(0.05, actual_s=0.01, predicted_s=0.01)
+    assert base.decide(0.05, **kw) == []          # balanced, no queue
+    ctrl = RuntimeController(sp, plan_bw=100e6)
+    ctrl.record_compute(0.05, actual_s=0.01, predicted_s=0.01)
+    ctrl.record_queue_wait(0.05, wait_s=0.05, service_s=0.01)  # 5x wait
+    assert ctrl.queue_pressure(0.05) == pytest.approx(5.0)
+    migr = ctrl.decide(0.05, **kw)
+    assert migr and all(m.to_path == "stream" for m in migr)
 
 
 def test_migration_budget_bounded_per_window():

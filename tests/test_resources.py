@@ -1,0 +1,208 @@
+"""Resource-server layer: DeviceRunQueue disciplines, LinkTopology
+stage composition, and degenerate parity with the PR 1 arbiter."""
+import numpy as np
+import pytest
+
+from repro.core.costs import NETWORKS, RunQueueModel, SharedLinkModel
+from repro.core.engine import BandwidthIntegrator, LinkStarvedError
+from repro.serving.cluster import SharedLinkArbiter
+from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
+                                     nic_uplink_topology, single_link)
+
+NET = NETWORKS["campus-wifi"]
+
+
+def flat_bw(bps, n=5000, dt=0.01):
+    return BandwidthIntegrator(np.full(n, bps), dt)
+
+
+# ---------------------------------------------------------------------------
+# DeviceRunQueue
+# ---------------------------------------------------------------------------
+
+def test_runqueue_fifo_waits_and_order():
+    rq = DeviceRunQueue(capacity=1, discipline="fifo")
+    assert rq.submit("a", 1.0, 0.0, flow=0) == 0.0        # starts at once
+    assert rq.submit("b", 1.0, 0.1, flow=1) is None       # queued
+    assert rq.submit("c", 1.0, 0.2, flow=2) is None
+    assert rq.depth() == 2 and rq.in_service() == 1 and rq.load() == 3
+    t_end, key = rq.next_completion()
+    assert (t_end, key) == (1.0, "a")
+    started = rq.complete("a", 1.0)
+    assert started == [("b", 1.0, 1.0)]                   # FIFO: b before c
+    assert rq.complete("b", 2.0) == [("c", 2.0, 1.0)]
+    assert rq.complete("c", 3.0) == []
+    # waits: a started immediately, b waited 0.9, c waited 1.8
+    assert np.allclose(rq.waits, [0.0, 0.9, 1.8])
+    assert rq.busy_s == 3.0
+
+
+def test_runqueue_capacity_parallel_slots():
+    rq = DeviceRunQueue(capacity=2)
+    assert rq.submit("a", 2.0, 0.0) == 0.0
+    assert rq.submit("b", 1.0, 0.0) == 0.0                # second slot
+    assert rq.submit("c", 1.0, 0.0) is None
+    t_end, key = rq.next_completion()
+    assert (t_end, key) == (1.0, "b")                     # earliest finish
+    assert rq.complete("b", 1.0) == [("c", 1.0, 1.0)]
+
+
+def test_runqueue_wfq_weight_share():
+    """Under backlog (>= 2 competing flows queued at every completion, as
+    engine sessions do: one outstanding chunk each) a weight-3 flow gets
+    3x the device time of each weight-1 flow."""
+    rq = DeviceRunQueue(capacity=1, discipline="wfq")
+    nxt = {0: 0, 1: 0, 2: 0}
+
+    def resubmit(flow, t):
+        key = (flow, nxt[flow])
+        nxt[flow] += 1
+        return rq.submit(key, 0.1, t, flow=flow,
+                         weight=3.0 if flow == 0 else 1.0)
+
+    for f in (0, 1, 2):
+        resubmit(f, 0.0)
+    served = {0: 0, 1: 0, 2: 0}
+    for _ in range(60):
+        t_end, key = rq.next_completion()
+        served[key[0]] += 1
+        rq.complete(key, t_end)
+        resubmit(key[0], t_end)              # keep the flow backlogged
+    assert served == {0: 30, 1: 15, 2: 15}   # exact 3:1:1 WFQ shares
+
+
+def test_runqueue_wfq_newcomer_does_not_starve_veteran():
+    """A flow that ran alone must not be starved when new flows arrive:
+    idle time is not banked as credit (the newcomers' attained service is
+    floored near the veteran's level), so shares equalize immediately."""
+    rq = DeviceRunQueue(capacity=1, discipline="wfq")
+    nxt: dict = {}
+
+    def resubmit(flow, t):
+        key = (flow, nxt.get(flow, 0))
+        nxt[flow] = nxt.get(flow, 0) + 1
+        return rq.submit(key, 1.0, t, flow=flow, weight=1.0)
+
+    resubmit(0, 0.0)
+    t = 0.0
+    for _ in range(100):                      # flow 0 runs alone for 100 s
+        t, key = rq.next_completion()
+        rq.complete(key, t)
+        resubmit(0, t)
+    resubmit(1, t)
+    resubmit(2, t)
+    served = {0: 0, 1: 0, 2: 0}
+    for _ in range(300):
+        t, key = rq.next_completion()
+        served[key[0]] += 1
+        rq.complete(key, t)
+        resubmit(key[0], t)
+    assert min(served.values()) >= 90         # ~100 each, no starvation
+
+
+def test_runqueue_fifo_ignores_weights():
+    rq = DeviceRunQueue(capacity=1, discipline="fifo")
+    rq.submit("a", 1.0, 0.0, flow=0, weight=1.0)
+    rq.submit("b", 1.0, 0.0, flow=1, weight=100.0)
+    rq.submit("c", 1.0, 0.0, flow=2, weight=10.0)
+    assert rq.complete("a", 1.0)[0][0] == "b"             # submit order
+
+
+def test_runqueue_model_validation():
+    with pytest.raises(AssertionError):
+        RunQueueModel(capacity=0)
+    with pytest.raises(AssertionError):
+        RunQueueModel(discipline="lifo")
+    assert RunQueueModel(2, "wfq").capacity == 2
+
+
+# ---------------------------------------------------------------------------
+# LinkTopology: degenerate single-stage parity with SharedLinkArbiter
+# ---------------------------------------------------------------------------
+
+def test_single_stage_topology_matches_arbiter():
+    """Same flows, same trace, same link model: identical completion
+    times and remaining-byte trajectories (rtol 1e-5)."""
+    link = SharedLinkModel(NET, contention_overhead=0.07)
+    arb = SharedLinkArbiter(flat_bw(100e6), link=link)
+    topo = single_link(flat_bw(100e6), link=link)
+    rng = np.random.default_rng(5)
+    events = [(0.0, "add", 0, 40e6), (0.1, "add", 1, 25e6),
+              (0.25, "add", 2, 60e6)]
+    for t, _, key, nbytes in events:
+        for srv in (arb, topo):
+            srv.advance(t)
+            srv.add(key, nbytes)
+    # drain both and compare completion sequences
+    done_a, done_t = [], []
+    for srv, out in ((arb, done_a), (topo, done_t)):
+        while srv.n_active():
+            t_done, key = srv.next_completion()
+            srv.advance(t_done)
+            srv.complete(key)
+            out.append((key, t_done))
+    assert [k for k, _ in done_a] == [k for k, _ in done_t]
+    for (_, ta), (_, tt) in zip(done_a, done_t):
+        assert np.isclose(ta, tt, rtol=1e-5)
+
+
+def test_single_flow_single_stage_exact_rate():
+    topo = single_link(flat_bw(100e6), link=SharedLinkModel(NET))
+    topo.add(0, 50e6)
+    t, k = topo.next_completion()
+    assert k == 0 and abs(t - 0.5) < 1e-6                 # eta(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# LinkTopology: two-stage composition
+# ---------------------------------------------------------------------------
+
+def test_two_stage_bottleneck_governs():
+    """One flow through a slow NIC and a fast uplink drains at the NIC
+    rate; two flows on distinct NICs sharing the uplink drain at the
+    uplink fair share once it becomes the bottleneck."""
+    nic_a, nic_b = flat_bw(40e6), flat_bw(40e6)
+    uplink = flat_bw(60e6)
+    topo = nic_uplink_topology([nic_a, nic_b], uplink, uplink_link=None)
+    topo.add(0, 20e6, path=("nic0", "uplink"))
+    t, k = topo.next_completion()
+    assert k == 0 and abs(t - 0.5) < 1e-3                 # 40 MB/s NIC-bound
+    # add a second flow: per-flow uplink share 30 MB/s < NIC 40 MB/s
+    topo.add(1, 30e6, path=("nic1", "uplink"))
+    t2, k2 = topo.next_completion()
+    # flow 0 has 20e6 left at 30 MB/s -> ~0.667s total
+    assert k2 == 0 and abs(t2 - 20e6 / 30e6) < 2e-2
+
+
+def test_two_stage_advance_conserves_bytes():
+    topo = nic_uplink_topology([flat_bw(40e6)], flat_bw(60e6))
+    topo.add(0, 10e6, path=("nic0", "uplink"))
+    topo.advance(0.1)                                     # 4 MB at NIC rate
+    assert abs(topo._rem[0] - 6e6) < 1e4
+    t, _ = topo.next_completion()
+    assert abs(t - 0.25) < 1e-3
+
+
+def test_topology_uplink_share_telemetry():
+    topo = single_link(flat_bw(100e6), link=None)
+    topo.add(0, 50e6)
+    topo.advance(0.2)                                     # alone: share 1.0
+    topo.add(1, 100e6)
+    topo.advance(0.4)                                     # shared: 0.5
+    assert abs(topo.mean_share(0) - (0.2 * 1.0 + 0.2 * 0.5) / 0.4) < 1e-9
+    assert abs(topo.mean_share(1) - 0.5) < 1e-9
+
+
+def test_topology_starved_raises():
+    topo = nic_uplink_topology([flat_bw(0.0, n=100)], flat_bw(100e6))
+    topo.add(0, 1e6, path=("nic0", "uplink"))
+    with pytest.raises(LinkStarvedError):
+        topo.next_completion()
+
+
+def test_topology_rejects_mismatched_dt():
+    with pytest.raises(AssertionError):
+        LinkTopology({
+            "a": LinkStage("a", BandwidthIntegrator(np.full(10, 1e6), 0.01)),
+            "b": LinkStage("b", BandwidthIntegrator(np.full(10, 1e6), 0.02)),
+        })

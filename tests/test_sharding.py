@@ -79,7 +79,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, sys.argv[1] + "/src")
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+try:
+    from jax.sharding import AxisType
+    MESH_KW = {"axis_types": (AxisType.Auto,) * 2}
+except ImportError:
+    MESH_KW = {}
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.distributed.sharding import make_rules, use_rules
 from repro.models import layers as L
@@ -93,8 +97,7 @@ for n_exp in (8, 6):
     p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32), jnp.float32)
     y_ref, _ = jax.jit(lambda p, x: L.moe_block_local(cfg, p, x))(p, x)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **MESH_KW)
     rules = make_rules(cfg, mesh)
     def f(p, x):
         with use_rules(rules):
