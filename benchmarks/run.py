@@ -18,6 +18,7 @@ BENCHES = [
     ("fig13", "benchmarks.bench_fig13_interference"),
     ("fig14", "benchmarks.bench_fig14_concurrency"),
     ("fleet", "benchmarks.bench_fleet_traffic"),
+    ("slo", "benchmarks.bench_slo_admission"),
     ("fig15", "benchmarks.bench_fig15_context_scaling"),
     ("fig16", "benchmarks.bench_fig16_breakdown"),
     ("quality", "benchmarks.bench_quality_validation"),

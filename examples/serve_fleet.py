@@ -8,13 +8,18 @@ fleet metrics. Three device-contention models over the same trace:
   - static util=0: contention coupling off (what single-request modeling
     hides);
   - WFQ run queue: compute *waits* in an explicit weighted-fair device
-    queue instead of dilating — queue-wait shows up in the breakdown.
+    queue instead of dilating — queue-wait shows up in the breakdown;
+  - SRPT + SLO: deadline-aware admission (predicted TTFT violations are
+    downgraded to coarser quant bits or shed) on the preemptive
+    shortest-remaining-first queue — attainment and shed counts appear
+    in the summary.
 
   PYTHONPATH=src python examples/serve_fleet.py
 """
 from repro.configs import SparKVConfig, get_config
 from repro.core.costs import RunQueueModel
 from repro.serving.cluster import ServingCluster
+from repro.serving.slo import SLOPolicy
 from repro.serving.traffic import TrafficProfile, generate_trace
 
 cfg = get_config("sparkv-qwen3-4b")
@@ -25,7 +30,10 @@ profile = TrafficProfile(
     context_mix=(("longchat", 0.6), ("triviaqa", 0.4)),
     policy_mix=(("sparkv", 0.6), ("strong_hybrid", 0.25),
                 ("local_prefill", 0.15)),
-    max_context=8192)
+    max_context=8192,
+    # 60% of requests are interactive with an 8 s TTFT SLO; the rest are
+    # best-effort batch (deadlines only bind in the SLO-armed mode below)
+    slo_mix=(("interactive", 8.0, 0.6), ("batch", None, 0.4)))
 specs = generate_trace(profile, 10, seed=42)
 print(f"trace: {len(specs)} requests over "
       f"{specs[-1].arrival_s:.1f}s (bursty), contexts "
@@ -34,7 +42,9 @@ print(f"trace: {len(specs)} requests over "
 
 for mode, kw in [("closed-loop", dict(closed_loop=True)),
                  ("static u=0 ", dict(closed_loop=False, static_util=0.0)),
-                 ("wfq queue  ", dict(run_queue=RunQueueModel(2, "wfq")))]:
+                 ("wfq queue  ", dict(run_queue=RunQueueModel(2, "wfq"))),
+                 ("srpt + slo ", dict(run_queue=RunQueueModel(2, "srpt"),
+                                      slo=SLOPolicy()))]:
     cluster = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
                              max_concurrency=4, **kw)
     rep = cluster.run(specs)
@@ -44,6 +54,10 @@ for mode, kw in [("closed-loop", dict(closed_loop=True)),
           f"req/s  {s['energy_per_req_j']:.0f} J/req  "
           f"{s['migrations_total']} migrations  "
           f"queue-wait p99 {s['queue_wait_p99_s']:.2f}s")
+    if kw.get("slo") is not None and s["slo_attainment"] is not None:
+        print(f"             SLO attainment {s['slo_attainment']:.0%}  "
+              f"shed {s['n_shed']}  downgraded {s['n_downgraded']}  "
+              f"goodput-under-SLO {s['goodput_slo_rps']:.2f} req/s")
     if mode == "closed-loop":
         print(f"{'rid':>3} {'policy':15s} {'arr':>6} {'queue':>6} "
               f"{'ttft':>7} {'str/cmp':>8} {'migr':>4}")

@@ -69,6 +69,15 @@ def quant_error(x: np.ndarray, bits: int, group: int) -> float:
 BITRATE_LEVELS = (8, 6, 5, 4, 3)
 
 
+def downgrade_ladder(bits: int) -> tuple[int, ...]:
+    """Ladder levels coarser than `bits`, finest first — the quality-
+    shedding walk SLO admission takes when a request's predicted TTFT
+    misses its deadline (``repro.serving.slo``): fewer bits means fewer
+    streamed bytes at a fidelity cost given by
+    ``repro.core.baselines.QUALITY_OF_BITS``."""
+    return tuple(b for b in BITRATE_LEVELS if b < bits)
+
+
 def layerwise_bits(level: int, layer: int, num_layers: int,
                    is_key: bool) -> int:
     """Layer-wise sensitivity allocation: keys and shallow layers get more

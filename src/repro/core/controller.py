@@ -21,6 +21,14 @@ undilated.
 
 Migrations per stage are bounded (spcfg.max_migrations_per_stage) to avoid
 oscillation.
+
+Deadline awareness (SLO layer): the serving cluster stamps a request's
+absolute TTFT deadline onto its controller (``set_deadline``). When the
+remaining slack falls inside the guard window *and* the measured link
+bandwidth has degraded below ``congested_frac`` of the planned bandwidth,
+compute->stream migrations are suppressed — a near-deadline flow is never
+migrated onto a congested link, where the queued bytes would land behind
+everyone else's backlog with no time left to recover.
 """
 from __future__ import annotations
 
@@ -77,6 +85,10 @@ class RuntimeController:
         self.migrations_this_stage = 0
         self.n_migrations = 0
         self._last_reset = 0.0
+        # SLO deadline (absolute, on the driver's clock); None = no SLO
+        self.deadline_s: Optional[float] = None
+        self.slack_guard_s = 2.0
+        self.congested_frac = 0.6
 
     def record_stream(self, t: float, nbytes: float):
         self.bw_win.add(t, nbytes)
@@ -88,6 +100,28 @@ class RuntimeController:
         """Device run-queue wait observed for one compute chunk (engine
         calls this when the driver acknowledged a queued start)."""
         self.queue_win.add(t, wait_s / max(service_s, 1e-9))
+
+    def set_deadline(self, t_deadline_s: float, *,
+                     slack_guard_s: Optional[float] = None,
+                     congested_frac: Optional[float] = None):
+        """Arm the deadline guard: an absolute TTFT deadline on the
+        driver's clock, the slack window inside which migrations onto a
+        degraded link are suppressed, and the measured/planned bandwidth
+        ratio below which the link counts as congested (None keeps the
+        controller's current values)."""
+        self.deadline_s = t_deadline_s
+        if slack_guard_s is not None:
+            self.slack_guard_s = slack_guard_s
+        if congested_frac is not None:
+            self.congested_frac = congested_frac
+
+    def _deadline_blocks_stream(self, now: float, bw: float) -> bool:
+        """True when this flow is near its deadline and the link is
+        congested — to-stream migrations would strand imminent work."""
+        if self.deadline_s is None:
+            return False
+        return (self.deadline_s - now <= self.slack_guard_s
+                and bw < self.congested_frac * self.plan_bw)
 
     def new_stage(self):
         self.migrations_this_stage = 0
@@ -143,7 +177,8 @@ class RuntimeController:
                     break
                 out.append(Migration(c, "compute", "bandwidth_drop"))
                 moved_s += chunk_bytes[c] / bw
-        elif t_c > cfg.imbalance_threshold * max(t_s, 1e-9) and comp_queue:
+        elif t_c > cfg.imbalance_threshold * max(t_s, 1e-9) and comp_queue \
+                and not self._deadline_blocks_stream(now, bw):
             # compute is the bottleneck: shed the tail of the compute order
             moved_c = 0.0
             for c in list(reversed(comp_queue))[:budget]:

@@ -166,7 +166,12 @@ class RunQueueModel:
       - ``"fifo"`` — jobs start in global submission order;
       - ``"wfq"``  — weighted fair queueing across request flows (a flow
         with weight w gets a ~w-proportional share of device time under
-        backlog).
+        backlog);
+      - ``"srpt"`` — shortest-remaining-first across flows, preemptive
+        at chunk boundaries, with a deadline floor so long flows are
+        deferred but never starved past their TTFT deadline
+        (``deadline_floor_s``: a queued job whose deadline is within
+        this window of now preempts the SRPT order, EDF-first).
 
     Consumed by ``repro.serving.resources.DeviceRunQueue``. When a
     cluster runs with a RunQueueModel, compute contention is expressed as
@@ -175,10 +180,12 @@ class RunQueueModel:
     util 0 for fleet-internal contention."""
     capacity: int = 1
     discipline: str = "fifo"
+    deadline_floor_s: float = 0.5
 
     def __post_init__(self):
         assert self.capacity >= 1, self.capacity
-        assert self.discipline in ("fifo", "wfq"), self.discipline
+        assert self.discipline in ("fifo", "wfq", "srpt"), self.discipline
+        assert self.deadline_floor_s >= 0, self.deadline_floor_s
 
 
 # ---------------------------------------------------------------------------

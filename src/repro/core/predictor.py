@@ -39,6 +39,16 @@ def queue_utilization(load: int, capacity: int, *,
     return min(load / max(capacity, 1), cap)
 
 
+def backlog_delay_s(backlog_s: float, capacity: int) -> float:
+    """Expected extra wait a newly-submitted chunk sees from the device
+    server's current service backlog (queued + in-service service
+    seconds, ``DeviceRunQueue.backlog_s``): the backlog drains
+    ``capacity`` jobs at a time, so a new arrival waits roughly the
+    backlog divided by the slot count. Feeds the SLO admission TTFT
+    projection (``repro.serving.slo.predict_ttft``)."""
+    return backlog_s / max(capacity, 1)
+
+
 def _init_mlp(rng, sizes=(3, 48, 24, 1)):
     params = []
     keys = jax.random.split(rng, len(sizes) - 1)

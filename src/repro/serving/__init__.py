@@ -4,10 +4,13 @@
   loading/decoding (real compression round-trip, real logit checks).
 - ``resources`` — generic discrete-event resource servers: fluid link
   stages/topologies (per-device NIC -> shared uplink) and the explicit
-  FIFO/WFQ device run queue.
+  FIFO/WFQ/SRPT device run queue.
 - ``cluster``   — ServingCluster: N concurrent loads on one clock, driving
   the resource servers (link topology + per-device run queues or the
   legacy closed-loop utilization coupling).
-- ``traffic``   — arrival processes, request mixes, device routing and
-  WFQ weight classes for fleet runs.
+- ``traffic``   — arrival processes, request mixes, device routing, WFQ
+  weight classes and SLO deadline classes for fleet runs.
+- ``slo``       — SLO-aware admission: TTFT prediction against the live
+  servers, quality shedding down the quantization bitrate ladder,
+  deadline-derived WFQ weights.
 """

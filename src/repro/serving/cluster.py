@@ -34,6 +34,14 @@ clock:
     admission — :func:`telemetry_policy` is the default telemetry-driven
     chooser (sparkv vs. local_prefill from live link share and queue
     depth).
+  - **SLO admission** — with an ``repro.serving.slo.SLOPolicy`` and
+    per-request TTFT deadlines, admission projects each request's TTFT
+    against the live servers; predicted violations are downgraded to
+    coarser stream quantization (the bitrate ladder) or shed, deadline
+    slack selects the WFQ weight class, and near-deadline flows are
+    guarded against migration onto congested links. Attainment,
+    shed/downgrade counts, and goodput-under-SLO land in the
+    :class:`FleetReport`.
 
 Protocol with the engine: each admitted request holds an
 ``HybridEngine.session`` generator; the cluster resumes a session only at
@@ -72,6 +80,8 @@ from repro.core.predictor import queue_utilization
 from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
                                      nic_uplink_topology, single_link)
+from repro.serving.slo import (SLOPolicy, decide_admission,
+                               plan_compute_seconds)
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +111,8 @@ class SharedLinkArbiter(LinkTopology):
 
 @dataclasses.dataclass
 class RequestSpec:
-    """One job for the cluster: when it arrives and what it loads."""
+    """One job for the cluster: when it arrives, what it loads, and the
+    service class it belongs to (WFQ weight / TTFT deadline)."""
     arrival_s: float
     context_len: int = 8192
     dataset: str = "longchat"
@@ -110,10 +121,16 @@ class RequestSpec:
     wl: Optional[WorkloadChunks] = None     # overrides synthesis if given
     device: int = 0                         # which device serves it
     weight: float = 1.0                     # WFQ share of device time
+    deadline_s: Optional[float] = None      # TTFT SLO, relative to arrival
+    slo_class: str = "default"              # reporting bucket for SLO stats
 
 
 @dataclasses.dataclass
 class RequestRecord:
+    """Per-request outcome row of a :class:`FleetReport`: identity and
+    policy, the TTFT decomposition (admission queue, device queue, link
+    share), energy/quality, and the SLO verdict (deadline, whether it was
+    met, and any admission-time quantization downgrade)."""
     rid: int
     spec: RequestSpec
     policy: str
@@ -133,6 +150,22 @@ class RequestRecord:
     compute_wait_s: float = 0.0             # device run-queue wait (total)
     n_compute_queued: int = 0
     uplink_share: float = 1.0               # mean uplink fraction received
+    # SLO verdict (None deadline = no SLO applied to this request)
+    slo_class: str = "default"
+    deadline_s: Optional[float] = None
+    slo_met: Optional[bool] = None
+    quant_bits: int = 0                     # effective stream quant bits
+    downgraded: bool = False                # admission walked the ladder
+
+
+@dataclasses.dataclass
+class ShedRecord:
+    """A request rejected at admission: its predicted TTFT violated the
+    deadline even at the coarsest quantization ladder level."""
+    rid: int
+    spec: RequestSpec
+    t_shed_s: float                         # when admission rejected it
+    pred_ttft_s: float                      # the violating prediction
 
 
 @dataclasses.dataclass
@@ -146,13 +179,24 @@ class _ActiveRequest:
     stream_chunk: Optional[Chunk] = None
     stream_t0: float = 0.0
     stream_t_proc: float = 0.0
+    # SLO / scheduling state
+    weight: float = 1.0                     # effective WFQ weight
+    deadline_abs: Optional[float] = None    # arrival + deadline_s
+    comp_total_s: float = 0.0               # planned compute seconds
+    comp_done_s: float = 0.0                # attained compute service
+    downgraded: bool = False
+    pred_ttft_s: Optional[float] = None
 
 
 @dataclasses.dataclass
 class FleetReport:
+    """Fleet-level outcome of one :meth:`ServingCluster.run`: per-request
+    records, requests shed at admission, and aggregate summary metrics
+    (tail TTFT, goodput, energy, queue/link breakdowns, SLO attainment)."""
     records: list[RequestRecord]
     makespan_s: float
     n_arrived: int
+    shed: list = dataclasses.field(default_factory=list)
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft_s for r in self.records])
@@ -187,6 +231,42 @@ class FleetReport:
             "queue_wait_mean_s": float(np.mean(waits)) if done else nan,
             "uplink_share_p50": pct(shares, 50),
             "uplink_share_p99": pct(shares, 99),
+            **self._slo_summary(),
+        }
+
+    def _slo_summary(self) -> dict:
+        """SLO attainment / shedding block of :meth:`summary`.
+
+        ``slo_attainment`` is over *served* requests that carried a
+        deadline (None when the trace had none) — the contract the
+        admission layer offers for work it accepts.
+        ``slo_attainment_arrived`` divides by every deadline request
+        that *arrived* (shed ones count as misses), so an admission
+        policy cannot inflate the headline number by shedding
+        aggressively; compare the two to see how much attainment is
+        scheduling gain vs. admission selectivity. ``goodput_slo_rps``
+        counts only requests that met their deadline (deadline-less
+        requests always count) — the throughput the fleet delivered
+        within contract."""
+        dl = [r for r in self.records if r.deadline_s is not None]
+        met = [r for r in dl if r.slo_met]
+        n_dl_shed = sum(1 for s in self.shed
+                        if s.spec.deadline_s is not None)
+        by_class: dict = {}
+        for r in dl:
+            by_class.setdefault(r.slo_class, []).append(r)
+        useful = len(self.records) - len(dl) + len(met)
+        return {
+            "slo_attainment": len(met) / len(dl) if dl else None,
+            "slo_attainment_arrived": len(met) / (len(dl) + n_dl_shed)
+            if dl or n_dl_shed else None,
+            "slo_attainment_by_class": {
+                k: sum(r.slo_met for r in v) / len(v)
+                for k, v in sorted(by_class.items())},
+            "n_shed": len(self.shed),
+            "n_downgraded": sum(r.downgraded for r in self.records),
+            "goodput_slo_rps": useful / self.makespan_s
+            if self.makespan_s else 0.0,
         }
 
 
@@ -250,6 +330,14 @@ class ServingCluster:
         uplink (two-stage topology); requests route via
         ``RequestSpec.device``. ``n_devices == 1`` with ``nic=None`` is
         the single-stage PR 1 semantics, bit-for-bit.
+    slo : an ``repro.serving.slo.SLOPolicy`` arms deadline-aware
+        admission for requests that carry ``RequestSpec.deadline_s``:
+        predicted-violation requests are downgraded to coarser stream
+        quantization or shed, deadline slack maps to WFQ weight classes,
+        and the per-request controller receives the deadline so
+        near-deadline flows are not migrated onto congested links.
+        Requests without a deadline are untouched (bit-identical to
+        ``slo=None``).
     bw_trace / bw_dt : optional explicit uplink trace (otherwise an OU
         trace is drawn from the network profile with ``bw_seed``).
     """
@@ -262,6 +350,7 @@ class ServingCluster:
                  run_queue: Optional[RunQueueModel] = None,
                  n_devices: int = 1, nic=None,
                  nic_link: Optional[SharedLinkModel] = None,
+                 slo: Optional["SLOPolicy"] = None,
                  policy_fn: Optional[Callable] = None,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
                  bw_seed: int = 991, seed: int = 0):
@@ -281,6 +370,7 @@ class ServingCluster:
         self.nic: Optional[NetworkProfile] = (
             NETWORKS[nic] if isinstance(nic, str) else nic)
         self.nic_link = nic_link
+        self.slo = slo
         self.policy_fn = policy_fn
         self.bw_trace = bw_trace
         self.bw_dt = bw_dt
@@ -307,6 +397,15 @@ class ServingCluster:
             rq = self._run_queues.get(device)
             return rq.load() if rq else 0
         return len(self._computing.get(device, ()))
+
+    def device_backlog_s(self, device: int = 0) -> float:
+        """Service seconds committed to `device` (run-queue mode; 0.0 in
+        closed-loop mode, where contention is already folded into the
+        admission-time util and dilated service times)."""
+        if self.run_queue is not None:
+            rq = self._run_queues.get(device)
+            return rq.backlog_s() if rq else 0.0
+        return 0.0
 
     # ---- contention signals ----
     def _coupled_util(self, device: int) -> float:
@@ -371,12 +470,15 @@ class ServingCluster:
         self._link_server = link_server
         self._computing = {d: set() for d in range(self.n_devices)}
         self._run_queues = {
-            d: DeviceRunQueue(self.capacity, self.run_queue.discipline)
+            d: DeviceRunQueue(
+                self.capacity, self.run_queue.discipline,
+                deadline_floor_s=self.run_queue.deadline_floor_s)
             for d in range(self.n_devices)} if self.run_queue else {}
 
         active: dict[int, _ActiveRequest] = {}
         queue: list[tuple[int, RequestSpec]] = []
         records: list[RequestRecord] = []
+        shed: list[ShedRecord] = []
         # heap: (t, seq, kind, rid, payload)
         heap: list = []
         seq = 0
@@ -411,7 +513,11 @@ class ServingCluster:
                         if self.run_queue is not None:
                             t0 = self._run_queues[dev].submit(
                                 (st.rid, ev.chunk), ev.duration_s, now,
-                                flow=st.rid, weight=st.spec.weight)
+                                flow=st.rid, weight=st.weight,
+                                remaining_s=max(st.comp_total_s
+                                                - st.comp_done_s,
+                                                ev.duration_s),
+                                deadline_s=st.deadline_abs)
                             if t0 is not None:
                                 push_compute(st.rid, ev.chunk, t0,
                                              ev.duration_s)
@@ -427,13 +533,45 @@ class ServingCluster:
             except StopIteration as stop:
                 return stop.value
 
-        def admit(rid: int, spec: RequestSpec):
+        def admit(rid: int, spec: RequestSpec) -> bool:
+            """Admit one request (possibly quality-downgraded); returns
+            False when the SLO layer shed it instead."""
             policy = spec.policy
             if self.policy_fn is not None:
                 policy = self.policy_fn(spec, self)
             plan = B.plan_policy(policy, self.cfg, wls[rid],
                                  self.profile_name, self.net, self.spcfg,
                                  util=self._admission_util(spec.device))
+            deadline_abs = (spec.arrival_s + spec.deadline_s
+                            if spec.deadline_s is not None else None)
+            weight = spec.weight
+            downgraded = False
+            pred_ttft = None
+            if self.slo is not None and spec.deadline_s is not None:
+                dec = decide_admission(self.slo, plan, self, spec, now)
+                pred_ttft = dec.pred_ttft_s
+                if dec.action == "shed":
+                    shed.append(ShedRecord(rid=rid, spec=spec, t_shed_s=now,
+                                           pred_ttft_s=dec.pred_ttft_s))
+                    return False
+                if dec.bits < plan.quality_bits:
+                    # coarser stream quantization: fewer bytes on the
+                    # wire at QUALITY_OF_BITS[dec.bits] fidelity
+                    scale = dec.bits / plan.quality_bits
+                    plan.bytes_map = {c: v * scale
+                                      for c, v in plan.bytes_map.items()}
+                    plan.quality_bits = dec.bits
+                    downgraded = True
+                if (self.run_queue is not None
+                        and self.run_queue.discipline == "wfq"
+                        and weight == 1.0):
+                    weight = self.slo.weight_for_slack(deadline_abs - now)
+            if self.slo is not None and deadline_abs is not None \
+                    and plan.controller is not None:
+                # deadline-aware migration guard is part of the SLO layer:
+                # without slo=, deadlines are recorded but never acted on,
+                # so no-SLO baselines keep exact pre-SLO behavior
+                plan.controller.set_deadline(deadline_abs)
             gt = GroundTruthLatency(
                 self.profile, self.cfg.resolved_head_dim
                 if self.cfg.num_heads else 64)
@@ -446,6 +584,7 @@ class ServingCluster:
                 cfg_model=self.cfg, util=self.static_util,
                 controller=plan.controller,
                 seed=self.seed + spec.seed)
+            comp_total = plan_compute_seconds(plan)
             st = _ActiveRequest(rid=rid, spec=spec, plan=plan,
                                 gen=eng.session(
                                     plan.schedule,
@@ -453,22 +592,28 @@ class ServingCluster:
                                     t_start=now,
                                     util_fn=lambda d=spec.device:
                                         self._coupled_util(d)),
-                                admit_s=now)
+                                admit_s=now, weight=weight,
+                                deadline_abs=deadline_abs,
+                                comp_total_s=comp_total,
+                                downgraded=downgraded,
+                                pred_ttft_s=pred_ttft)
             active[rid] = st
             res = drive(st, prime=True)
             if res is not None:
                 finalize(st, res)
+            return True
 
         def finalize(st: _ActiveRequest, res):
             nonlocal makespan
             active.pop(st.rid)
             self._computing[st.spec.device].discard(st.rid)
             quality = B._mixed_quality(res, st.plan.quality_bits)
+            ttft = res.ttft_s - arrival_s[st.rid]
             records.append(RequestRecord(
                 rid=st.rid, spec=st.spec, policy=st.plan.policy,
                 admit_s=st.admit_s, context_done_s=res.context_done_s,
                 done_s=res.ttft_s,
-                ttft_s=res.ttft_s - arrival_s[st.rid],
+                ttft_s=ttft,
                 queue_s=st.admit_s - arrival_s[st.rid],
                 energy_j=res.energy["total_j"], quality=quality,
                 n_streamed=res.n_streamed, n_computed=res.n_computed,
@@ -478,10 +623,17 @@ class ServingCluster:
                 bytes_streamed=res.bytes_streamed,
                 compute_wait_s=res.compute_wait_s,
                 n_compute_queued=res.n_compute_queued,
-                uplink_share=link_server.mean_share(st.rid)))
+                uplink_share=link_server.mean_share(st.rid),
+                slo_class=st.spec.slo_class,
+                deadline_s=st.spec.deadline_s,
+                slo_met=(ttft <= st.spec.deadline_s
+                         if st.spec.deadline_s is not None else None),
+                quant_bits=st.plan.quality_bits,
+                downgraded=st.downgraded))
             makespan = max(makespan, res.ttft_s)
-            if queue:
-                admit(*queue.pop(0))
+            while queue:
+                if admit(*queue.pop(0)):
+                    break
 
         guard = 0
         limit = 1000 + 200 * sum(w.n_t * w.n_l * max(w.n_h, 1) for w in wls)
@@ -516,6 +668,7 @@ class ServingCluster:
             elif kind == "compute_done":
                 chunk, t0 = payload
                 st = active[rid]
+                st.comp_done_s += t - t0
                 if self.run_queue is not None:
                     started = self._run_queues[st.spec.device].complete(
                         (rid, chunk), t)
@@ -540,4 +693,5 @@ class ServingCluster:
         self._run_queues = {}
         self._computing = {}
         return FleetReport(records=sorted(records, key=lambda r: r.rid),
-                           makespan_s=makespan, n_arrived=len(specs))
+                           makespan_s=makespan, n_arrived=len(specs),
+                           shed=sorted(shed, key=lambda s: s.rid))

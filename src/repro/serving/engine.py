@@ -224,6 +224,7 @@ class SparKVServer:
                     closed_loop: bool = True, static_util: float = 0.0,
                     max_concurrency: Optional[int] = None,
                     link=None, run_queue=None, policy_fn=None,
+                    slo=None, deadline_s: Optional[float] = None,
                     bw_seed: int = 991):
         """Serve many registered contexts concurrently on one clock.
 
@@ -232,10 +233,13 @@ class SparKVServer:
         multi-request cluster (link topology + device servers); KV
         content for any request can still be assembled afterwards with
         load_context(). Pass a ``repro.core.costs.RunQueueModel`` as
-        ``run_queue`` to serve compute through the explicit FIFO/WFQ
-        device queue, and/or a ``policy_fn`` (e.g.
+        ``run_queue`` to serve compute through the explicit
+        FIFO/WFQ/SRPT device queue, and/or a ``policy_fn`` (e.g.
         ``repro.serving.cluster.telemetry_policy``) to pick policies from
-        live telemetry at admission. Returns a FleetReport.
+        live telemetry at admission. An ``repro.serving.slo.SLOPolicy``
+        as ``slo`` (with ``deadline_s`` applied to every job) arms
+        deadline-aware admission: downgrade-or-shed on predicted TTFT
+        violation. Returns a FleetReport.
         """
         from repro.serving.cluster import RequestSpec, ServingCluster
         specs = []
@@ -243,14 +247,14 @@ class SparKVServer:
             st = self.contexts[cid]
             specs.append(RequestSpec(
                 arrival_s=arrival_s, context_len=st.wl.context_len,
-                policy=policy, seed=i, wl=st.wl))
+                policy=policy, seed=i, wl=st.wl, deadline_s=deadline_s))
         cluster = ServingCluster(
             self.model.cfg, self.spcfg, self.profile, self.network,
             capacity=self.capacity,
             max_concurrency=max_concurrency or self.capacity,
             closed_loop=closed_loop, static_util=static_util,
             link=link, run_queue=run_queue, policy_fn=policy_fn,
-            bw_seed=bw_seed, seed=self.seed)
+            slo=slo, bw_seed=bw_seed, seed=self.seed)
         return cluster.run(specs)
 
     def _decode(self, st: StoredContext, cache, prompt, max_new):

@@ -20,10 +20,13 @@ Two families:
 
 - :class:`DeviceRunQueue` — a *slotted* server: compute jobs occupy one
   of ``capacity`` service slots for a fixed duration; excess jobs wait in
-  an explicit queue under a FIFO or weighted-fair (WFQ) discipline.  This
+  an explicit queue under a FIFO, weighted-fair (WFQ), or deadline-floored
+  shortest-remaining-first (SRPT) discipline — SRPT preempts at chunk
+  boundaries only, since chunks are the atomic service unit.  This
   replaces the scalar ``util`` dilation: concurrent chunks *wait*, they
-  don't mutually stretch.  Queue depth / waits are the telemetry that
-  feeds the latency predictor's U feature and the runtime controller.
+  don't mutually stretch.  Queue depth / waits / service backlog are the
+  telemetry that feeds the latency predictor's U feature, the SLO
+  admission layer (``repro.serving.slo``), and the runtime controller.
 
 All servers are deterministic given their inputs; time is the cluster's
 virtual clock (seconds).
@@ -247,6 +250,8 @@ class _QueuedJob:
     weight: float
     t_submit: float
     seq: int
+    remaining_s: float = 0.0          # flow's est. remaining service (srpt)
+    deadline_s: Optional[float] = None   # absolute deadline (srpt floor)
 
 
 class DeviceRunQueue:
@@ -268,20 +273,33 @@ class DeviceRunQueue:
       device time under backlog (capped by the engine's one-outstanding-
       chunk-per-request protocol at capacity/(capacity+1)-ish shares);
       ties break by submit order.
+    - ``"srpt"``  — shortest-remaining-processing-time, preemptive at
+      chunk boundaries: chunks are the atomic service unit, so a running
+      chunk is never interrupted, but at every dispatch the queued job
+      whose *flow* has the least estimated remaining service
+      (``remaining_s``, supplied by the driver from its plan minus
+      attained service) starts next. A **deadline floor** bounds the
+      starvation SRPT would otherwise inflict on long flows: any queued
+      job whose absolute ``deadline_s`` is within ``deadline_floor_s``
+      of now preempts the SRPT order, earliest deadline first — a long
+      flow is deferred by shorter ones only until its deadline approaches,
+      never past it while the server has a dispatch to give.
 
     The protocol mirrors the fluid servers: ``submit`` returns the start
     time (or ``None`` if queued), ``complete(key, t)`` frees the slot and
     returns the jobs that start as a result. ``next_completion()`` is the
-    earliest in-service finish. ``load()`` / ``depth()`` / ``waits`` are
-    the telemetry surface (predictor U feature, controller pressure,
-    fleet reports).
+    earliest in-service finish. ``load()`` / ``depth()`` / ``backlog_s()``
+    / ``waits`` are the telemetry surface (predictor U feature, SLO
+    admission prediction, controller pressure, fleet reports).
     """
 
-    def __init__(self, capacity: int = 1, discipline: str = "fifo"):
+    def __init__(self, capacity: int = 1, discipline: str = "fifo", *,
+                 deadline_floor_s: float = 0.5):
         assert capacity >= 1
-        assert discipline in ("fifo", "wfq"), discipline
+        assert discipline in ("fifo", "wfq", "srpt"), discipline
         self.capacity = capacity
         self.discipline = discipline
+        self.deadline_floor_s = deadline_floor_s
         self._queue: list[_QueuedJob] = []
         self._running: dict = {}             # key -> (t_end, job)
         self._attained: dict = {}            # flow -> attained service
@@ -302,11 +320,26 @@ class DeviceRunQueue:
         """Occupancy: in-service + waiting jobs."""
         return len(self._queue) + len(self._running)
 
+    def backlog_s(self) -> float:
+        """Service seconds committed to the server: queued plus
+        in-service job durations (in-service jobs count in full — a
+        conservative bound, since the clock-free queue cannot know how
+        much of a running chunk has elapsed). The SLO admission layer
+        drains this by ``capacity`` to project a new request's wait."""
+        return (sum(j.duration_s for j in self._queue)
+                + sum(job.duration_s for _, job in self._running.values()))
+
     # ---- protocol ----
     def submit(self, key, duration_s: float, t: float, *,
-               flow=None, weight: float = 1.0) -> Optional[float]:
+               flow=None, weight: float = 1.0,
+               remaining_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> Optional[float]:
         """Returns the start time if the job enters service now, else
-        None (it waits; the driver learns the start via complete())."""
+        None (it waits; the driver learns the start via complete()).
+        ``remaining_s`` (srpt) is the flow's estimated remaining service
+        including this job (defaults to the job's own duration);
+        ``deadline_s`` (srpt) is the flow's absolute deadline for the
+        anti-starvation floor."""
         assert weight > 0
         f = key if flow is None else flow
         if self.discipline == "wfq":
@@ -318,7 +351,10 @@ class DeviceRunQueue:
                      - 3.0 * float(duration_s) / weight) * weight
             self._attained[f] = max(self._attained.get(f, 0.0), floor)
         job = _QueuedJob(key=key, duration_s=float(duration_s),
-                         flow=f, weight=weight, t_submit=t, seq=self._seq)
+                         flow=f, weight=weight, t_submit=t, seq=self._seq,
+                         remaining_s=float(duration_s if remaining_s is None
+                                           else max(remaining_s, duration_s)),
+                         deadline_s=deadline_s)
         self._seq += 1
         self._queue.append(job)
         started = self._dispatch(t)
@@ -336,9 +372,21 @@ class DeviceRunQueue:
         return min(self._attained.get(j.flow, 0.0) / j.weight
                    for j in jobs)
 
-    def _pick(self) -> int:
+    def _pick(self, t: float) -> int:
         if self.discipline == "fifo":
             return 0                         # queue is in submit order
+        if self.discipline == "srpt":
+            # deadline floor: jobs whose deadline is within the floor of
+            # now override SRPT order, earliest deadline first — a long
+            # flow never starves past its deadline
+            urgent = [i for i, j in enumerate(self._queue)
+                      if j.deadline_s is not None
+                      and j.deadline_s - t <= self.deadline_floor_s]
+            if urgent:
+                return min(urgent, key=lambda i: (
+                    self._queue[i].deadline_s, self._queue[i].seq))
+            return min(range(len(self._queue)), key=lambda i: (
+                self._queue[i].remaining_s, self._queue[i].seq))
         return min(range(len(self._queue)), key=lambda i: (
             self._attained.get(self._queue[i].flow, 0.0)
             / self._queue[i].weight,
@@ -348,7 +396,7 @@ class DeviceRunQueue:
         """Fill free slots; returns [(key, t_start, duration_s), ...]."""
         started = []
         while self._queue and len(self._running) < self.capacity:
-            job = self._queue.pop(self._pick())
+            job = self._queue.pop(self._pick(t))
             self.waits.append(t - job.t_submit)
             self._vtime = max(self._vtime,
                               self._attained.get(job.flow, 0.0)

@@ -1,0 +1,186 @@
+"""SLO-aware admission for the serving cluster (deadline scheduling layer).
+
+Requests carry per-class TTFT deadlines (``RequestSpec.deadline_s``,
+relative to arrival). This module supplies the three admission-time
+mechanisms the cluster composes on top of the resource servers:
+
+  - **TTFT prediction** — :func:`predict_ttft` projects a request's TTFT
+    from its plan (per-chunk predicted stream/compute costs) and the live
+    resource servers: the fair-share uplink fraction with this flow
+    added, and the device run queue's service backlog.
+  - **Quality shedding** — :func:`decide_admission` compares the
+    prediction against the deadline. A predicted violation first walks
+    the request's KV stream down the quantization bitrate ladder
+    (``repro.compression.quantize.downgrade_ladder``: fewer bits, fewer
+    bytes, lower fidelity — the "don't waste bits" degradation lever);
+    if even the coarsest level misses, the request is shed (rejected)
+    instead of poisoning everyone's tail.
+  - **Deadline-derived WFQ weights** — :meth:`SLOPolicy.weight_for_slack`
+    maps deadline slack at admission to the ``DeviceRunQueue`` weight
+    classes, so "interactive vs. background" falls out of the deadlines
+    instead of hand-set weights.
+
+Requests without a deadline bypass all three mechanisms: a cluster with
+``slo=SLOPolicy()`` but no deadlines in the trace is bit-identical to one
+without the policy (tested in tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.compression.quantize import downgrade_ladder
+from repro.core.costs import t_stream as chunk_stream_seconds
+from repro.core.engine import decode_first_token_seconds
+from repro.core.predictor import backlog_delay_s
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOPolicy:
+    """Admission-control policy knobs.
+
+    Parameters
+    ----------
+    downgrade : try coarser stream quantization before rejecting.
+    shed : reject requests whose predicted TTFT misses the deadline even
+        at the coarsest ladder level (False = admit best-effort at the
+        coarsest level instead).
+    ladder : explicit downgrade bit-widths (finest first); ``None`` uses
+        every ``BITRATE_LEVELS`` entry coarser than the plan's bits.
+    headroom : safety multiplier on the prediction (1.1 = require 10%
+        slack; admission uses ``pred * headroom <= deadline``).
+    weight_bins : ``((slack_le_s, weight), ...)`` sorted by slack — the
+        deadline-to-WFQ-weight mapping; a request whose admission-time
+        slack is <= the first threshold gets that weight, etc. The
+        mapping applies only to deadline-carrying requests still at the
+        default weight 1.0: a hand-set ``RequestSpec.weight`` != 1.0
+        always wins (weight 1.0 *is* the "unset" sentinel — a trace
+        that hand-assigns exactly 1.0 and also wants deadline weights
+        untouched should disable the mapping with ``weight_bins=()``).
+    base_weight : weight for requests with slack beyond every bin (and
+        the effective weight of deadline-less requests).
+    """
+    downgrade: bool = True
+    shed: bool = True
+    ladder: Optional[tuple] = None
+    headroom: float = 1.0
+    weight_bins: tuple = ((2.0, 8.0), (5.0, 4.0))
+    base_weight: float = 1.0
+
+    def weight_for_slack(self, slack_s: float) -> float:
+        """WFQ weight class for a request with `slack_s` of deadline
+        slack left at admission (tighter deadline -> heavier weight)."""
+        for thresh, weight in self.weight_bins:
+            if slack_s <= thresh:
+                return float(weight)
+        return float(self.base_weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    action: str                 # "admit" | "shed"
+    bits: int                   # effective stream quantization bits
+    pred_ttft_s: float          # the prediction that justified `action`
+    downgraded: bool = False
+
+
+def plan_compute_seconds(plan) -> float:
+    """Total planned compute seconds of a request plan (the scheduler's
+    per-chunk predictions over the compute-assigned chunks). Shared by
+    the admission TTFT projection and the cluster's SRPT remaining-work
+    bookkeeping so the two never drift."""
+    return sum(float(plan.planner.tc[plan.grid.index(c)])
+               for stage in plan.schedule.stages for c in stage.comp)
+
+
+def predict_ttft(plan, cluster, spec, now: float, *,
+                 bits: Optional[int] = None) -> float:
+    """Projected TTFT (arrival -> first token) if `spec` is admitted now.
+
+    The projection is the planner's own cost model evaluated against the
+    *live* servers rather than an idle device and exclusive link:
+
+      - stream path: planned stream bytes (scaled to `bits` when
+        downgrading) over the projected per-flow bandwidth — the
+        profiled uplink mean times the fair share this flow would get
+        with ``n_active + 1`` flows, capped by the per-device NIC mean
+        in two-stage topologies (the bottleneck stage governs) — plus
+        the on-device decode/dequant tails;
+      - compute path: planned per-chunk compute predictions, with the
+        contention wait modeled as the max of two regimes — occupancy
+        dilation (the engine keeps one chunk outstanding per request, so
+        every one of this request's chunks competes with ~``load`` other
+        flows for ``capacity`` slots over its whole lifetime) and the
+        drain of the service seconds already committed to the device
+        (:func:`repro.core.predictor.backlog_delay_s`, which dominates
+        when a few long jobs rather than many flows hold the queue).
+        The two regimes count the same queued chunks, so they are
+        max-combined, never summed;
+      - plus elapsed admission-queue wait and the first-token decode.
+
+    The two paths overlap in the engine, so the context time is their
+    max — the same fluid approximation the offline planner uses. The
+    plan's per-chunk predictions already carry the admission-time U
+    feature, so the projection errs conservative under load: admitted
+    deadline-class requests should actually meet their deadlines.
+    """
+    factor = 1.0 if bits is None else bits / plan.quality_bits
+    n_flows = cluster.active_flows()
+    frac = cluster.link.per_flow_fraction(n_flows + 1) if cluster.link \
+        else 1.0 / (n_flows + 1)
+    bw_eff = cluster.net.mean_bw * frac
+    if cluster.nic is not None:
+        # two-stage topology: the flow drains at the slower of its NIC
+        # and its uplink share — ignoring the NIC would over-admit
+        # exactly when the NIC is the bottleneck
+        bw_eff = min(bw_eff, cluster.nic.mean_bw)
+    t_stream = 0.0
+    for stage in plan.schedule.stages:
+        for c in stage.stream:
+            # the planner's own per-chunk stream cost, at the projected
+            # bottleneck bandwidth (keeps admission in lockstep with
+            # planning if the stream cost model evolves)
+            t_stream += chunk_stream_seconds(
+                plan.bytes_map[c] * factor, bw_eff, cluster.profile)
+    t_comp = plan_compute_seconds(plan)
+    dilation = 1.0 + cluster.device_load(spec.device) \
+        / max(cluster.capacity, 1)
+    t_comp = max(t_comp * dilation,
+                 t_comp + backlog_delay_s(
+                     cluster.device_backlog_s(spec.device),
+                     cluster.capacity))
+    t_first = decode_first_token_seconds(cluster.cfg, plan.context_len,
+                                         cluster.profile)
+    return (now - spec.arrival_s) + max(t_stream, t_comp) + t_first
+
+
+def decide_admission(policy: SLOPolicy, plan, cluster, spec,
+                     now: float) -> AdmissionDecision:
+    """Admit / downgrade / shed `spec` against its TTFT deadline.
+
+    Walks the quantization ladder finest-first: the first bit-width whose
+    predicted TTFT (with `policy.headroom`) meets the deadline wins.
+    When none does, the request is shed (``policy.shed``) or admitted
+    best-effort at the coarsest level.
+    """
+    assert spec.deadline_s is not None, "decide_admission needs a deadline"
+    deadline = spec.deadline_s
+
+    pred = predict_ttft(plan, cluster, spec, now)
+    if pred * policy.headroom <= deadline:
+        return AdmissionDecision("admit", plan.quality_bits, pred)
+
+    ladder = policy.ladder if policy.ladder is not None \
+        else downgrade_ladder(plan.quality_bits)
+    if policy.downgrade:
+        for bits in ladder:
+            pred = predict_ttft(plan, cluster, spec, now, bits=bits)
+            if pred * policy.headroom <= deadline:
+                return AdmissionDecision("admit", bits, pred,
+                                         downgraded=True)
+    if policy.shed:
+        return AdmissionDecision("shed", plan.quality_bits, pred)
+    if policy.downgrade and ladder:
+        return AdmissionDecision("admit", ladder[-1], pred,
+                                 downgraded=True)
+    return AdmissionDecision("admit", plan.quality_bits, pred)

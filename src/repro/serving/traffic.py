@@ -17,6 +17,13 @@ mixes device capabilities. For the resource-server cluster, traces can
 also spread requests over ``n_devices`` (round-robin — the two-stage
 NIC/uplink topology routes per device) and draw per-request WFQ weights
 from ``weight_mix`` (interactive vs. background service classes).
+
+SLO classes: ``slo_mix`` draws a named service class per request, each
+carrying a TTFT deadline (or ``None`` for best-effort) — e.g. a 70/30
+interactive/batch split where only interactive requests have deadlines.
+The cluster's SLO admission layer (``repro.serving.slo``) consumes the
+deadlines; the class name is the reporting bucket for per-class
+attainment in the ``FleetReport``.
 """
 from __future__ import annotations
 
@@ -47,6 +54,8 @@ class TrafficProfile:
     # resource-server routing
     n_devices: int = 1                  # round-robin device assignment
     weight_mix: tuple = ((1.0, 1.0),)   # (wfq weight, draw weight)
+    # SLO classes: (class name, ttft deadline_s | None, draw weight)
+    slo_mix: tuple = ()                 # empty = no deadlines
 
 
 def _arrival_times(profile: TrafficProfile, n: int,
@@ -89,6 +98,10 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
     wfq_weights = [w for w, _ in profile.weight_mix]
     wfq_p = np.array([v for _, v in profile.weight_mix], float)
     wfq_p /= wfq_p.sum()
+    slo_p = None
+    if profile.slo_mix:
+        slo_p = np.array([w for _, _, w in profile.slo_mix], float)
+        slo_p /= slo_p.sum()
     specs = []
     for i, t in enumerate(arrivals):
         ds_name = _weighted(profile.context_mix, rng)
@@ -98,10 +111,15 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
         ctx = max(profile.chunk_tokens,
                   int(raw // profile.chunk_tokens) * profile.chunk_tokens)
         wfq_w = float(wfq_weights[rng.choice(len(wfq_weights), p=wfq_p)])
+        slo_class, deadline = "default", None
+        if slo_p is not None:
+            slo_class, deadline, _ = profile.slo_mix[
+                rng.choice(len(profile.slo_mix), p=slo_p)]
         specs.append(RequestSpec(
             arrival_s=float(t), context_len=ctx, dataset=ds_name,
             policy=_weighted(profile.policy_mix, rng), seed=seed + i,
-            device=i % max(profile.n_devices, 1), weight=wfq_w))
+            device=i % max(profile.n_devices, 1), weight=wfq_w,
+            deadline_s=deadline, slo_class=slo_class))
     return specs
 
 

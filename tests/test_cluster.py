@@ -263,6 +263,118 @@ def test_telemetry_policy_reads_live_servers():
     assert telemetry_policy(spec, cl) == "sparkv"
 
 
+# ---------------------------------------------------------------------------
+# SLO-aware admission (deadlines, shedding, downgrades, weight mapping)
+# ---------------------------------------------------------------------------
+
+def test_slo_noop_without_deadlines():
+    """Arming the SLO policy must be bit-identical to slo=None when no
+    request carries a deadline — for both FIFO and WFQ queues."""
+    from repro.serving.slo import SLOPolicy
+    specs = [RequestSpec(arrival_s=0.3 * i, context_len=CTX,
+                         policy="sparkv", seed=i) for i in range(3)]
+    for disc in ("fifo", "wfq"):
+        base = make_cluster(run_queue=RunQueueModel(1, disc)).run(specs)
+        slo = make_cluster(run_queue=RunQueueModel(1, disc),
+                           slo=SLOPolicy()).run(specs)
+        assert base.summary() == slo.summary(), disc
+        assert [r.ttft_s for r in base.records] \
+            == [r.ttft_s for r in slo.records], disc
+        assert slo.summary()["slo_attainment"] is None
+        assert slo.summary()["n_shed"] == 0
+
+
+def test_slo_sheds_under_overload_and_reports():
+    """Overload with tight deadlines: predicted violations are shed at
+    admission, every shed is accounted for, and attainment over served
+    deadline requests beats the FIFO-without-SLO fleet."""
+    from repro.serving.slo import SLOPolicy
+    specs = [RequestSpec(arrival_s=0.0, context_len=2 * CTX,
+                         policy="sparkv", seed=0, slo_class="batch")]
+    specs += [RequestSpec(arrival_s=0.4 * i, context_len=CTX,
+                          policy="sparkv", seed=i, deadline_s=5.0,
+                          slo_class="interactive")
+              for i in range(1, 8)]
+    plain = make_cluster(run_queue=RunQueueModel(1, "fifo")).run(specs)
+    rep = make_cluster(run_queue=RunQueueModel(1, "srpt"),
+                       slo=SLOPolicy()).run(specs)
+    s = rep.summary()
+    assert s["n_shed"] > 0
+    assert len(rep.records) + s["n_shed"] == rep.n_arrived
+    for sh in rep.shed:
+        assert sh.spec.deadline_s is not None
+        assert sh.pred_ttft_s > sh.spec.deadline_s   # a predicted miss
+    served_dl = [r for r in rep.records if r.deadline_s is not None]
+    if served_dl:
+        att = s["slo_attainment"]
+        assert att == sum(r.slo_met for r in served_dl) / len(served_dl)
+        assert att >= plain.summary()["slo_attainment"]
+        # arrived-denominator attainment counts shed as misses
+        n_met = sum(r.slo_met for r in served_dl)
+        assert s["slo_attainment_arrived"] == pytest.approx(
+            n_met / (len(served_dl) + s["n_shed"]))
+        assert s["slo_attainment_arrived"] <= att
+    # goodput-under-SLO only counts in-contract work
+    assert s["goodput_slo_rps"] <= s["goodput_rps"] + 1e-12
+
+
+def test_slo_downgrade_marks_records_and_quality():
+    """A stream-bound fleet under deadline pressure downgrades some
+    requests to coarser bits: records carry the effective width and the
+    fidelity hit shows up in the quality score."""
+    from repro.serving.slo import SLOPolicy
+    specs = [RequestSpec(arrival_s=0.2 * i, context_len=2 * CTX,
+                         policy="strong_hybrid", seed=i, deadline_s=9.0,
+                         slo_class="interactive") for i in range(8)]
+    rep = make_cluster(run_queue=RunQueueModel(2, "wfq"),
+                       slo=SLOPolicy()).run(specs)
+    down = [r for r in rep.records if r.downgraded]
+    assert down, "scenario produced no downgrades"
+    assert rep.summary()["n_downgraded"] == len(down)
+    full = [r for r in rep.records if not r.downgraded]
+    for r in down:
+        assert r.quant_bits < SP.quant_bits
+        assert r.quant_bits in (4, 3)
+    if full and any(r.n_streamed for r in down):
+        assert min(r.quality for r in down) \
+            < max(r.quality for r in full) + 1e-12
+
+
+def test_slo_deadline_weight_mapping_protects_interactive():
+    """With WFQ, deadline slack maps to the weight class: the same trace
+    with the mapping disabled (empty bins -> weight 1) gives the
+    deadline class worse TTFTs."""
+    from repro.serving.slo import SLOPolicy
+    specs = [RequestSpec(arrival_s=0.0, context_len=2 * CTX,
+                         policy="sparkv", seed=0)]
+    specs += [RequestSpec(arrival_s=0.3 * i, context_len=CTX,
+                          policy="sparkv", seed=i, deadline_s=8.0)
+              for i in range(1, 6)]
+    out = {}
+    for label, bins in (("mapped", ((10.0, 8.0),)), ("flat", ())):
+        pol = SLOPolicy(shed=False, downgrade=False, weight_bins=bins)
+        rep = make_cluster(run_queue=RunQueueModel(1, "wfq"),
+                           slo=pol).run(specs)
+        ints = [r.ttft_s for r in rep.records if r.deadline_s is not None]
+        assert len(ints) == 5, label                 # nothing shed
+        out[label] = float(np.mean(ints))
+    assert out["mapped"] < out["flat"]
+
+
+def test_slo_met_flag_consistent():
+    from repro.serving.slo import SLOPolicy
+    specs = [RequestSpec(arrival_s=0.2 * i, context_len=CTX,
+                         policy="sparkv", seed=i, deadline_s=20.0)
+             for i in range(3)]
+    rep = make_cluster(run_queue=RunQueueModel(2, "fifo"),
+                       slo=SLOPolicy()).run(specs)
+    for r in rep.records:
+        assert r.slo_met == (r.ttft_s <= r.deadline_s)
+        assert r.deadline_s == 20.0
+    assert rep.summary()["slo_attainment"] == \
+        sum(r.slo_met for r in rep.records) / len(rep.records)
+
+
 def test_telemetry_policy_end_to_end_mixes_fleet():
     specs = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
                          seed=i) for i in range(6)]

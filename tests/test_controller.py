@@ -154,6 +154,31 @@ def test_queue_pressure_triggers_shed():
     assert migr and all(m.to_path == "stream" for m in migr)
 
 
+def test_deadline_guard_blocks_stream_shed_on_congested_link():
+    """A near-deadline flow on a congested link must not shed compute
+    chunks to streaming; a far deadline or a healthy link lifts the
+    guard (SLO layer: don't migrate imminent work onto a starved hop)."""
+    sp = SparKVConfig()
+    chunks = [Chunk(0, l, 0) for l in range(4)]
+    kw = dict(stream_queue=[], comp_queue=chunks, ready=set(),
+              chunk_bytes={c: 1e4 for c in chunks},
+              t_comp_pred={c: 0.5 for c in chunks})
+
+    def contended(deadline=None, congested=True):
+        ctrl = RuntimeController(sp, plan_bw=100e6)
+        ctrl.record_compute(0.05, actual_s=0.03, predicted_s=0.01)
+        if congested:
+            ctrl.record_stream(0.05, 1e3)     # ~5 KB/s << 100 MB/s plan
+        if deadline is not None:
+            ctrl.set_deadline(deadline)
+        return ctrl.decide(0.05, **kw)
+
+    assert contended(deadline=None) != []               # no SLO: sheds
+    assert contended(deadline=1.0) == []                # guard holds
+    assert contended(deadline=100.0) != []              # slack is ample
+    assert contended(deadline=1.0, congested=False) != []   # link healthy
+
+
 def test_migration_budget_bounded_per_window():
     sp = SparKVConfig(max_migrations_per_stage=2)
     ctrl = RuntimeController(sp, plan_bw=100e6)

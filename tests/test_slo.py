@@ -1,0 +1,201 @@
+"""SLO admission layer: deadline->weight mapping, TTFT prediction,
+the exact shed boundary, the quantization downgrade walk (including the
+concrete kv_dequant round-trip at coarser bits), and deadline-class
+traffic generation."""
+import numpy as np
+import pytest
+
+from repro.compression.quantize import (dequantize, downgrade_ladder,
+                                        quantize)
+from repro.configs import SparKVConfig, get_config
+from repro.core import baselines as B
+from repro.core.costs import NETWORKS, RunQueueModel
+from repro.core.engine import BandwidthIntegrator
+from repro.core.predictor import backlog_delay_s
+from repro.data.workloads import DATASETS, synthesize
+from repro.kernels.kv_dequant.ops import dequantize_chunk
+from repro.serving.cluster import RequestSpec, ServingCluster
+from repro.serving.resources import DeviceRunQueue, single_link
+from repro.serving.slo import SLOPolicy, decide_admission, predict_ttft
+from repro.serving.traffic import TrafficProfile, generate_trace
+
+CFG = get_config("sparkv-qwen3-4b")
+SP = SparKVConfig(scheduler_mode="engine")
+NET = NETWORKS["campus-wifi"]
+
+
+# ---------------------------------------------------------------------------
+# policy knobs
+# ---------------------------------------------------------------------------
+
+def test_weight_for_slack_bins():
+    pol = SLOPolicy(weight_bins=((2.0, 8.0), (5.0, 4.0)), base_weight=1.0)
+    assert pol.weight_for_slack(0.5) == 8.0       # tightest bin
+    assert pol.weight_for_slack(2.0) == 8.0       # inclusive threshold
+    assert pol.weight_for_slack(3.0) == 4.0
+    assert pol.weight_for_slack(10.0) == 1.0      # beyond every bin
+
+
+def test_downgrade_ladder_is_coarser_finest_first():
+    assert downgrade_ladder(5) == (4, 3)
+    assert downgrade_ladder(8) == (6, 5, 4, 3)
+    assert downgrade_ladder(3) == ()
+
+
+def test_backlog_delay_drains_by_capacity():
+    assert backlog_delay_s(4.0, 1) == 4.0
+    assert backlog_delay_s(4.0, 2) == 2.0
+    assert backlog_delay_s(4.0, 0) == 4.0         # capacity floor of 1
+
+
+# ---------------------------------------------------------------------------
+# prediction + admission decision against live servers
+# ---------------------------------------------------------------------------
+
+def _idle_cluster(**kw):
+    kw.setdefault("run_queue", RunQueueModel(1, "fifo"))
+    cl = ServingCluster(CFG, SP, "jetson-orin", "campus-wifi",
+                        max_concurrency=8, **kw)
+    bw = BandwidthIntegrator(np.full(2000, NET.mean_bw), 0.01)
+    cl._link_server = single_link(bw, cl.link)
+    cl._run_queues = {0: DeviceRunQueue(cl.capacity,
+                                        cl.run_queue.discipline)}
+    return cl
+
+
+def _plan(policy="cachegen", ctx=2048):
+    wl = synthesize(CFG, ctx, DATASETS["longchat"],
+                    chunk_tokens=SP.chunk_tokens, quant_bits=SP.quant_bits)
+    return B.plan_policy(policy, CFG, wl, "jetson-orin", NET, SP, util=0.0)
+
+
+def test_predict_ttft_grows_with_contention():
+    cl = _idle_cluster()
+    plan = _plan("cachegen")
+    spec = RequestSpec(arrival_s=0.0, context_len=2048, deadline_s=5.0)
+    idle = predict_ttft(plan, cl, spec, 0.0)
+    assert idle > 0
+    for i in range(3):                            # three competing flows
+        cl._link_server.add(i, 1e7)
+    assert predict_ttft(plan, cl, spec, 0.0) > idle
+    # elapsed admission-queue wait counts against the deadline budget
+    assert predict_ttft(plan, cl, spec, 2.0) == pytest.approx(
+        predict_ttft(plan, cl, spec, 0.0) + 2.0)
+
+
+def test_predict_ttft_caps_at_nic_bandwidth():
+    """Two-stage topologies: the projection drains at the slower of the
+    NIC mean and the uplink fair share (device-nic mean 75 MB/s < the
+    campus-wifi uplink's 106 MB/s, so an idle NIC-capped cluster must
+    predict a longer stream path than the bare uplink)."""
+    plan = _plan("cachegen")
+    spec = RequestSpec(arrival_s=0.0, context_len=2048, deadline_s=5.0)
+    bare = predict_ttft(plan, _idle_cluster(), spec, 0.0)
+    nic = predict_ttft(plan, _idle_cluster(nic="device-nic"), spec, 0.0)
+    assert nic > bare
+
+
+def test_predict_ttft_counts_device_backlog():
+    cl = _idle_cluster()
+    plan = _plan("local_prefill")
+    spec = RequestSpec(arrival_s=0.0, context_len=2048, deadline_s=5.0)
+    idle = predict_ttft(plan, cl, spec, 0.0)
+    cl._run_queues[0].submit("x", 3.0, 0.0)       # 3 s of committed work
+    assert predict_ttft(plan, cl, spec, 0.0) > idle + 2.9
+
+
+def test_shed_boundary_is_exactly_the_prediction():
+    """With downgrade off, the admit/shed flip happens exactly where the
+    predicted TTFT crosses the deadline."""
+    cl = _idle_cluster()
+    plan = _plan("cachegen")
+    pol = SLOPolicy(downgrade=False, shed=True)
+    spec = RequestSpec(arrival_s=0.0, context_len=2048, deadline_s=0.0)
+    pred = predict_ttft(plan, cl, spec, 0.0)
+    spec.deadline_s = pred * 1.001
+    dec = decide_admission(pol, plan, cl, spec, 0.0)
+    assert dec.action == "admit" and not dec.downgraded
+    assert dec.bits == plan.quality_bits
+    spec.deadline_s = pred * 0.999
+    dec = decide_admission(pol, plan, cl, spec, 0.0)
+    assert dec.action == "shed"
+    assert dec.pred_ttft_s == pytest.approx(pred)
+
+
+def test_downgrade_walks_ladder_finest_first():
+    """A stream-bound plan whose full-bits prediction misses but whose
+    next-coarser prediction fits must admit at exactly that width; one
+    level further down for the next deadline band; below the coarsest
+    prediction it sheds."""
+    cl = _idle_cluster()
+    plan = _plan("cachegen")                      # stream-only plan
+    pol = SLOPolicy(downgrade=True, shed=True)
+    spec = RequestSpec(arrival_s=0.0, context_len=2048, deadline_s=1.0)
+    ladder = downgrade_ladder(plan.quality_bits)
+    b1, b2, b_min = ladder[0], ladder[1], ladder[-1]
+    p0 = predict_ttft(plan, cl, spec, 0.0)
+    p1 = predict_ttft(plan, cl, spec, 0.0, bits=b1)
+    p2 = predict_ttft(plan, cl, spec, 0.0, bits=b2)
+    p_min = predict_ttft(plan, cl, spec, 0.0, bits=b_min)
+    assert p_min <= p2 < p1 < p0                  # fewer bits, fewer bytes
+
+    spec.deadline_s = (p1 + p0) / 2
+    dec = decide_admission(pol, plan, cl, spec, 0.0)
+    assert (dec.action, dec.bits, dec.downgraded) == ("admit", b1, True)
+
+    spec.deadline_s = (p2 + p1) / 2
+    dec = decide_admission(pol, plan, cl, spec, 0.0)
+    assert (dec.action, dec.bits, dec.downgraded) == ("admit", b2, True)
+
+    spec.deadline_s = p_min * 0.9
+    assert decide_admission(pol, plan, cl, spec, 0.0).action == "shed"
+    # shed=False: best-effort admission at the coarsest level instead
+    dec = decide_admission(SLOPolicy(shed=False), plan, cl, spec, 0.0)
+    assert (dec.action, dec.bits) == ("admit", b_min)
+
+
+# ---------------------------------------------------------------------------
+# downgraded bits round-trip through the concrete dequant kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", downgrade_ladder(5))
+def test_downgraded_bits_roundtrip_kv_dequant(bits):
+    """A KV chunk quantized at the coarser ladder width must assemble
+    through the Pallas kv_dequant kernel exactly as the numpy reference
+    dequantizes it (the shedding downgrade changes bits on the wire, not
+    the assembly path)."""
+    rng = np.random.default_rng(bits)
+    x = rng.normal(size=(64, 4, 32)).astype(np.float32)
+    qt = quantize(x, bits, group=64)
+    assert qt.bits == bits and qt.codes.max() < (1 << bits)
+    import jax.numpy as jnp
+    kernel = np.asarray(dequantize_chunk(qt, out_dtype=jnp.float32))
+    ref = dequantize(qt)
+    np.testing.assert_allclose(kernel, ref, atol=1e-6)
+    # coarser bits lose more fidelity but stay a faithful reconstruction
+    rel = np.sqrt(np.mean((ref - x) ** 2)) / np.sqrt(np.mean(x ** 2))
+    assert rel < 0.2
+
+
+# ---------------------------------------------------------------------------
+# deadline-class traffic
+# ---------------------------------------------------------------------------
+
+def test_traffic_slo_mix_draws_classes_and_deadlines():
+    prof = TrafficProfile(rate_rps=1.0,
+                          slo_mix=(("interactive", 4.0, 0.5),
+                                   ("batch", None, 0.5)))
+    specs = generate_trace(prof, 40, seed=3)
+    classes = {s.slo_class for s in specs}
+    assert classes == {"interactive", "batch"}
+    for s in specs:
+        if s.slo_class == "interactive":
+            assert s.deadline_s == 4.0
+        else:
+            assert s.deadline_s is None
+
+
+def test_traffic_without_slo_mix_has_no_deadlines():
+    specs = generate_trace(TrafficProfile(rate_rps=1.0), 10, seed=3)
+    assert all(s.deadline_s is None and s.slo_class == "default"
+               for s in specs)

@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Every relative link target in the given markdown files must resolve to
+an existing file or directory (URL fragments are stripped; http(s)/
+mailto/anchor-only links are skipped). Exits non-zero listing every
+broken link.
+
+  python tools/check_links.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links [text](target) — tolerates titles: (target "title").
+# Targets with spaces / unescaped parens aren't parsed; use %20.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# reference-style definitions: [label]: target
+REF_DEF_RE = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.M)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path) -> tuple[int, list[str]]:
+    """Returns (links checked, broken-link messages) for one file."""
+    broken = []
+    text = md.read_text(encoding="utf-8")
+    # strip fenced code blocks so shell snippets aren't parsed for links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    targets = LINK_RE.findall(text) + REF_DEF_RE.findall(text)
+    for target in targets:
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            broken.append(f"{md}: broken link -> {target}")
+    return len(targets), broken
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv]
+    if not files:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    missing = [str(f) for f in files if not f.is_file()]
+    if missing:
+        print("not a file: " + ", ".join(missing))
+        return 2
+    n_links = 0
+    broken: list[str] = []
+    for f in files:
+        n, b = check_file(f)
+        n_links += n
+        broken.extend(b)
+    for b in broken:
+        print(b)
+    print(f"checked {len(files)} files, {n_links} links, "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
