@@ -88,7 +88,7 @@ def run(quick: bool = False, seeds: int = 3, multi_device: bool = False):
         rows, title = _scalar_rows(quick, seeds)
     print(table(rows, list(rows[0].keys()), title=title))
     save("fig13_interference" + ("_multi_device" if multi_device else ""),
-         {"rows": rows})
+         {"rows": rows}, quick=quick)
     return rows
 
 

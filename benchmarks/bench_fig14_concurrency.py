@@ -143,7 +143,7 @@ def run(quick: bool = False, closed_loop: bool = False):
         title = "\n[Fig 14] concurrent-request contention"
     print(table(rows, list(rows[0].keys()), title=title))
     save("fig14_concurrency" + ("_closed_loop" if closed_loop else ""),
-         {"rows": rows, "disciplines": disc_rows})
+         {"rows": rows, "disciplines": disc_rows}, quick=quick)
     return rows
 
 

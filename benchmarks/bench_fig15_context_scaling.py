@@ -34,7 +34,7 @@ def run(quick: bool = False):
     print(table(rows, list(rows[0].keys()),
                 title="\n[Fig 15] TTFT vs reusable-context length "
                       "(jetson-agx)"))
-    save("fig15_context_scaling", {"rows": rows})
+    save("fig15_context_scaling", {"rows": rows}, quick=quick)
     return rows
 
 

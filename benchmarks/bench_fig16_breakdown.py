@@ -33,7 +33,7 @@ def run(quick: bool = False):
     print(table(rows, list(rows[0].keys()),
                 title="\n[Fig 16] SparKV overhead breakdown "
                       "(laptop, TriviaQA-like)"))
-    save("fig16_breakdown", {"rows": rows})
+    save("fig16_breakdown", {"rows": rows}, quick=quick)
     return rows
 
 

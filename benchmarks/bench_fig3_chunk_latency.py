@@ -33,7 +33,7 @@ def run(quick: bool = False):
     print(table(rows, list(rows[0].keys()),
                 title="\n[Fig 3] chunk compute-latency heterogeneity "
                       "(TriviaQA-like)"))
-    save("fig3_chunk_latency", {"rows": rows})
+    save("fig3_chunk_latency", {"rows": rows}, quick=quick)
     return rows
 
 

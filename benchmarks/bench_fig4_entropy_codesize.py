@@ -57,7 +57,8 @@ def run(quick: bool = False):
                       "(real model KV)"))
     save("fig4_entropy_codesize", {"rows": rows,
                                    "entropies": ents.tolist(),
-                                   "sizes": sizes.tolist()})
+                                   "sizes": sizes.tolist()},
+         quick=quick)
     return rows
 
 

@@ -41,7 +41,7 @@ def run(quick: bool = False):
         })
     print(table(rows, list(rows[0].keys()),
                 title="\n[Fig 8] latency predictor vs roofline baseline"))
-    save("fig8_predictor", {"rows": rows})
+    save("fig8_predictor", {"rows": rows}, quick=quick)
     return rows
 
 

@@ -80,7 +80,7 @@ def run(quick: bool = False, scenario: str = "fig9_laptop",
     print(table(rows, cols,
                 title=f"\n[{scenario}] TTFT (s) + quality, "
                       f"SparKV vs baselines"))
-    save(scenario, {"rows": rows})
+    save(scenario, {"rows": rows}, quick=quick)
     return rows
 
 

@@ -95,7 +95,8 @@ def run(quick: bool = False, discipline: str | None = None):
               f" vs solo {c['solo_stream_s']:.3f}s")
 
     save("fleet_traffic" + (f"_{discipline}" if discipline else ""),
-         {"rows": rows, "contention": contention, "migrations": migr})
+         {"rows": rows, "contention": contention, "migrations": migr},
+         quick=quick)
     return rows
 
 

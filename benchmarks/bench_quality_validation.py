@@ -48,7 +48,7 @@ def run(quick: bool = False):
     print(table(rows, list(rows[0].keys()),
                 title="\n[quality validation] real-model fidelity vs the "
                       "bits->quality table used in simulation"))
-    save("quality_validation", {"rows": rows})
+    save("quality_validation", {"rows": rows}, quick=quick)
     return rows
 
 

@@ -83,7 +83,7 @@ def run(quick: bool = False, mesh_tag: str = "pod16x16"):
     print(table([r for r in rows],
                 cols, title=f"\n[Roofline] per-cell terms ({mesh_tag}, "
                             f"v5e: 197TF/s, 819GB/s HBM, 50GB/s link)"))
-    save(f"roofline_{mesh_tag}", {"rows": rows})
+    save(f"roofline_{mesh_tag}", {"rows": rows}, quick=quick)
     return rows
 
 

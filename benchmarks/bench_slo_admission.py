@@ -118,7 +118,8 @@ def run(quick: bool = False):
                            "scenarios": {k: dict(zip(
                                ("policy", "rate_rps", "deadline_s",
                                 "capacity"), v))
-                               for k, v in SCENARIOS.items()}})
+                               for k, v in SCENARIOS.items()}},
+         quick=quick)
     return all_rows
 
 

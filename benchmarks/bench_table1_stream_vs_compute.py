@@ -40,7 +40,7 @@ def run(quick: bool = False):
         })
     print(table(rows, list(rows[0].keys()),
                 title="\n[Table I] KV streaming vs on-device prefill"))
-    save("table1_stream_vs_compute", {"rows": rows})
+    save("table1_stream_vs_compute", {"rows": rows}, quick=quick)
     return rows
 
 

@@ -84,7 +84,7 @@ def run(quick: bool = False):
     print(table(rows, list(rows[0].keys()),
                 title="\n[Table II] greedy heuristic vs exact MILP "
                       "(reduced oracle grids)"))
-    save("table2_greedy_vs_milp", {"rows": rows})
+    save("table2_greedy_vs_milp", {"rows": rows}, quick=quick)
     return rows
 
 

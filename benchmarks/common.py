@@ -1,4 +1,11 @@
-"""Shared benchmark utilities: result recording + table printing."""
+"""Shared benchmark utilities: result recording + table printing.
+
+Quick runs (``--quick``) are smoke tests on reduced workloads: their
+numbers are not comparable to full runs, so :func:`save` routes them to
+``results/benchmarks/quick/`` (git-ignored) — a quick run can never
+clobber a checked-in full-run result. Every bench must pass its ``quick``
+flag through to ``save`` (enforced by tests/test_benchmark_guard.py).
+"""
 from __future__ import annotations
 
 import json
@@ -7,12 +14,14 @@ import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "benchmarks")
+QUICK_DIR = os.path.join(RESULTS_DIR, "quick")
 
 
-def save(name: str, payload: dict):
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    payload = dict(payload, _bench=name, _time=time.time())
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
+def save(name: str, payload: dict, *, quick: bool = False):
+    out_dir = QUICK_DIR if quick else RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    payload = dict(payload, _bench=name, _time=time.time(), _quick=quick)
+    path = os.path.join(out_dir, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=str)
     return path

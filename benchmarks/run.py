@@ -19,6 +19,7 @@ BENCHES = [
     ("fig14", "benchmarks.bench_fig14_concurrency"),
     ("fleet", "benchmarks.bench_fleet_traffic"),
     ("slo", "benchmarks.bench_slo_admission"),
+    ("decode", "benchmarks.bench_decode_goodput"),
     ("fig15", "benchmarks.bench_fig15_context_scaling"),
     ("fig16", "benchmarks.bench_fig16_breakdown"),
     ("quality", "benchmarks.bench_quality_validation"),

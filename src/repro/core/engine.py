@@ -35,6 +35,15 @@ Two driving modes:
         resume the generator with this request's next :class:`Completion`
         (whose ``t_start`` is the actual service start, so queue wait is
         observable as ``t_start - submit time``).
+      * :class:`DecodeStart` — with ``max_new_tokens > 0`` the engine,
+        once its context is assembled, asks for autoregressive decode.
+        The driver enrols it in a per-device continuous decode batch
+        (``repro.serving.decode.DecodeBatcher``) and delivers tokens as
+        :class:`DecodeTick` / :class:`DecodeDone` completions at later
+        ``Wait`` yields; TTFT/TTLT/TPOT then come from the batcher's
+        token timeline instead of the analytic first-token constant.
+        With ``max_new_tokens == 0`` (the default) the decode phase is
+        absent and results are bit-identical to pre-decode behaviour.
 
     Controller bookkeeping follows the ack: an immediate start records the
     compute sample at yield time (bit-compatible with PR 1); a queued
@@ -81,6 +90,13 @@ class EngineResult:
     bytes_streamed: float
     compute_wait_s: float = 0.0   # total device run-queue wait observed
     n_compute_queued: int = 0     # compute chunks that did not start at once
+    # decode phase (max_new_tokens > 0; defaults are the first-token-only
+    # accounting: one token, delivered at ttft_s)
+    n_tokens_out: int = 1
+    ttlt_s: float = 0.0           # last-token time (driver clock)
+    tpot_s: float = 0.0           # mean inter-token time after the first
+    decode_busy_s: float = 0.0    # this request's share of decode-step time
+    token_times: tuple = ()       # absolute per-token delivery times
 
     def breakdown(self) -> dict:
         return {
@@ -168,19 +184,44 @@ class BandwidthIntegrator:
         return hi
 
 
+def _kv_bytes_per_token(cfg, context_len: int) -> float:
+    """Per-layer bytes one decode step reads for one sequence: the KV
+    cache at `context_len` (bf16 k+v) for attention models, the SSM
+    state for state-space models."""
+    if cfg.num_heads:
+        return 2 * context_len * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+    return 2 * cfg.ssm.state_dim * cfg.d_model * cfg.ssm.expand
+
+
 def decode_first_token_seconds(cfg, context_len: int,
                                profile: DeviceProfile) -> float:
     """One-token forward over the assembled cache (memory-bound)."""
-    if cfg.num_heads:
-        kv_bytes = (2 * context_len * cfg.num_kv_heads
-                    * cfg.resolved_head_dim * 2)
-    else:
-        kv_bytes = 2 * cfg.ssm.state_dim * cfg.d_model * cfg.ssm.expand
+    kv_bytes = _kv_bytes_per_token(cfg, context_len)
     act = cfg.active_param_count()
     per_layer = (kv_bytes / profile.hbm_bw
                  + 2 * (act / max(cfg.num_layers, 1)) / profile.peak_flops)
     return cfg.num_layers * per_layer + 2 * act * 2 / profile.hbm_bw \
         / max(cfg.num_layers, 1)
+
+
+def decode_step_seconds(cfg, context_lens, profile: DeviceProfile) -> float:
+    """One batched decode step: one token for each of ``len(context_lens)``
+    co-resident sequences.
+
+    The batched generalization of :func:`decode_first_token_seconds`
+    (identical roofline terms, so a batch of one reproduces the
+    first-token cost): per-sequence KV reads sum over the batch, compute
+    scales with the batch, but the weight-read term is paid **once per
+    step** — the amortization that makes continuous batching raise
+    tokens/s without changing any per-sequence work."""
+    b = len(context_lens)
+    assert b >= 1, "decode step needs at least one sequence"
+    act = cfg.active_param_count()
+    kv_total = sum(_kv_bytes_per_token(cfg, context_len)
+                   for context_len in context_lens)
+    return (cfg.num_layers * kv_total / profile.hbm_bw
+            + b * 2 * act / profile.peak_flops
+            + 2 * act * 2 / profile.hbm_bw / max(cfg.num_layers, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +274,39 @@ class Completion:
     t_end: float              # chunk available (stream: incl. t_proc)
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodeStart:
+    """Engine's context is fully assembled and it wants ``n_tokens`` of
+    autoregressive decode. The driver enrols the request into a per-device
+    decode batch (``repro.serving.decode.DecodeBatcher``) and replies
+    None; token deliveries arrive as :class:`DecodeTick` /
+    :class:`DecodeDone` completions at the engine's subsequent ``Wait``
+    yields. ``context_len`` is the KV length the first step reads."""
+    context_len: int
+    n_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeTick:
+    """One batched-dispatch completion for this request: the dispatch ran
+    over ``[t_start, t_end]`` on the device and delivered
+    ``token_times`` (absolute clock times, one per generated token).
+    ``busy_share_s`` is this request's share of the dispatch's device-busy
+    time (step time divided by the co-resident batch at each sub-step) —
+    the engine folds it into compute-energy accounting."""
+    t_start: float
+    t_end: float
+    token_times: tuple
+    batch_size: int
+    busy_share_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeDone(DecodeTick):
+    """The dispatch that delivers this request's final token (its
+    ``token_times`` completes the quota requested via DecodeStart)."""
+
+
 @dataclasses.dataclass
 class HybridEngine:
     grid: ChunkGrid
@@ -246,6 +320,7 @@ class HybridEngine:
     util: float = 0.0            # static external contention (Fig. 14)
     controller: Optional[RuntimeController] = None
     seed: int = 0
+    max_new_tokens: int = 0      # 0 = first-token-only (legacy behaviour)
 
     def _t_comp_actual(self, c: Chunk, rng, util: Optional[float] = None
                        ) -> float:
@@ -405,20 +480,57 @@ class HybridEngine:
                             stream_q.append(m.chunk)
                             n_migr += 1
 
-        t_first = decode_first_token_seconds(self.cfg_model, context_len,
-                                             self.profile)
-        ttft = now + t_first
+        if self.max_new_tokens <= 0:
+            # first-token-only accounting (bit-identical to pre-decode
+            # behaviour): TTFT = context completion + analytic one-token
+            # forward; the response "ends" at the first token
+            t_first = decode_first_token_seconds(self.cfg_model, context_len,
+                                                 self.profile)
+            ttft = now + t_first
+            meter = EnergyMeter(self.profile,
+                                compute_busy_s=comp_busy + t_first,
+                                nic_busy_s=stream_busy, wall_s=ttft - t_start)
+            return EngineResult(
+                ttft_s=ttft, context_done_s=now, energy=meter.breakdown(),
+                n_streamed=len(streamed_set), n_computed=len(computed_set),
+                n_migrations=n_migr, stream_busy_s=stream_busy,
+                compute_busy_s=comp_busy, proc_busy_s=proc_busy,
+                timeline=timeline, streamed_set=streamed_set,
+                computed_set=computed_set, bytes_streamed=bytes_streamed,
+                compute_wait_s=compute_wait, n_compute_queued=n_queued,
+                ttlt_s=ttft, token_times=(ttft,))
+
+        # ---- decode phase: the driver owns token timing (batched) ----
+        t_ctx_done = now
+        yield DecodeStart(context_len=context_len,
+                          n_tokens=self.max_new_tokens)
+        token_t: list[float] = []
+        decode_busy = 0.0
+        while len(token_t) < self.max_new_tokens:
+            ev = yield Wait()
+            assert isinstance(ev, DecodeTick), ev
+            token_t.extend(ev.token_times)
+            decode_busy += ev.busy_share_s
+            now = max(now, ev.t_end)
+        assert len(token_t) == self.max_new_tokens, \
+            (len(token_t), self.max_new_tokens)
+        ttft, ttlt = token_t[0], token_t[-1]
+        n_out = len(token_t)
         meter = EnergyMeter(self.profile,
-                            compute_busy_s=comp_busy + t_first,
-                            nic_busy_s=stream_busy, wall_s=ttft - t_start)
+                            compute_busy_s=comp_busy + decode_busy,
+                            nic_busy_s=stream_busy, wall_s=ttlt - t_start)
         return EngineResult(
-            ttft_s=ttft, context_done_s=now, energy=meter.breakdown(),
+            ttft_s=ttft, context_done_s=t_ctx_done,
+            energy=meter.breakdown(),
             n_streamed=len(streamed_set), n_computed=len(computed_set),
             n_migrations=n_migr, stream_busy_s=stream_busy,
             compute_busy_s=comp_busy, proc_busy_s=proc_busy,
             timeline=timeline, streamed_set=streamed_set,
             computed_set=computed_set, bytes_streamed=bytes_streamed,
-            compute_wait_s=compute_wait, n_compute_queued=n_queued)
+            compute_wait_s=compute_wait, n_compute_queued=n_queued,
+            n_tokens_out=n_out, ttlt_s=ttlt,
+            tpot_s=(ttlt - ttft) / max(n_out - 1, 1),
+            decode_busy_s=decode_busy, token_times=tuple(token_t))
 
     # ------------------------------------------------------------------
     # Classic single-request driver (exclusive link + device)
@@ -428,6 +540,7 @@ class HybridEngine:
         now = 0.0
         # at most one stream + one compute in flight for a single request
         inflight: list[tuple[float, float, str, Chunk]] = []
+        pending_decode: Optional[DecodeDone] = None
         try:
             ev = next(gen)
             while True:
@@ -439,6 +552,25 @@ class HybridEngine:
                     inflight.append((now + ev.duration_s, now, "compute",
                                      ev.chunk))
                     ev = gen.send(None)
+                elif isinstance(ev, DecodeStart):
+                    # exclusive device: serial batch-of-1 decode, one step
+                    # per token over the growing context
+                    ts, t, busy = [], now, 0.0
+                    for i in range(ev.n_tokens):
+                        dt = decode_step_seconds(
+                            self.cfg_model, [ev.context_len + i],
+                            self.profile)
+                        t += dt
+                        busy += dt
+                        ts.append(t)
+                    pending_decode = DecodeDone(
+                        t_start=now, t_end=t, token_times=tuple(ts),
+                        batch_size=1, busy_share_s=busy)
+                    ev = gen.send(None)
+                elif pending_decode is not None:        # Wait (decoding)
+                    now = pending_decode.t_end
+                    ev = gen.send(pending_decode)
+                    pending_decode = None
                 else:                                   # Wait
                     inflight.sort(key=lambda e: e[0])
                     t_end, t_st, path, c = inflight.pop(0)

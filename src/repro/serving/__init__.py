@@ -8,6 +8,9 @@
 - ``cluster``   — ServingCluster: N concurrent loads on one clock, driving
   the resource servers (link topology + per-device run queues or the
   legacy closed-loop utilization coupling).
+- ``decode``    — continuous batched decoding: per-device DecodeBatcher
+  whose batched token dispatches share the device run queue with
+  in-flight prefill chunks (full-response goodput, TPOT/TTLT metrics).
 - ``traffic``   — arrival processes, request mixes, device routing, WFQ
   weight classes and SLO deadline classes for fleet runs.
 - ``slo``       — SLO-aware admission: TTFT prediction against the live

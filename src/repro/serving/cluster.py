@@ -42,6 +42,18 @@ clock:
     guarded against migration onto congested links. Attainment,
     shed/downgrade counts, and goodput-under-SLO land in the
     :class:`FleetReport`.
+  - **continuous batched decode** — a request with
+    ``RequestSpec.max_new_tokens > 0`` does not end at its first token:
+    once its context is assembled it joins the device's
+    :class:`repro.serving.decode.DecodeBatcher` (join/leave at token
+    boundaries, ``DecodeConfig.max_batch`` co-resident sequences) and
+    batched decode *dispatches* flow through the same device run queue
+    as prefill chunks — decode and prefill genuinely contend for device
+    time under the FIFO/WFQ/SRPT discipline. Per-request token
+    timelines yield TPOT/TTLT, the :class:`FleetReport` gains tokens/s
+    and full-response goodput, and energy covers the decode tail.
+    Requests with ``max_new_tokens == 0`` keep first-token-only
+    accounting, bit-identical to the pre-decode fleet.
 
 Protocol with the engine: each admitted request holds an
 ``HybridEngine.session`` generator; the cluster resumes a session only at
@@ -74,10 +86,12 @@ from repro.core.chunks import Chunk
 from repro.core.costs import (GroundTruthLatency, NetworkProfile, PROFILES,
                               NETWORKS, RunQueueModel, SharedLinkModel)
 from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
+                               DecodeDone, DecodeStart, DecodeTick,
                                HybridEngine, StartAck, StreamStart, Wait,
                                decode_first_token_seconds)
 from repro.core.predictor import queue_utilization
 from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
+from repro.serving.decode import DecodeBatcher, DecodeConfig
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
                                      nic_uplink_topology, single_link)
 from repro.serving.slo import (SLOPolicy, decide_admission,
@@ -123,6 +137,8 @@ class RequestSpec:
     weight: float = 1.0                     # WFQ share of device time
     deadline_s: Optional[float] = None      # TTFT SLO, relative to arrival
     slo_class: str = "default"              # reporting bucket for SLO stats
+    max_new_tokens: int = 0                 # 0 = first-token-only (legacy)
+    tpot_slo_s: Optional[float] = None      # per-token latency SLO (decode)
 
 
 @dataclasses.dataclass
@@ -156,16 +172,25 @@ class RequestRecord:
     slo_met: Optional[bool] = None
     quant_bits: int = 0                     # effective stream quant bits
     downgraded: bool = False                # admission walked the ladder
+    # decode phase (first-token-only accounting when max_new_tokens == 0:
+    # one token, ttlt == ttft, no inter-token time)
+    n_tokens_out: int = 1
+    ttlt_s: float = 0.0                     # last token - arrival
+    tpot_s: float = 0.0                     # mean inter-token time
+    tpot_slo_s: Optional[float] = None
 
 
 @dataclasses.dataclass
 class ShedRecord:
     """A request rejected at admission: its predicted TTFT violated the
-    deadline even at the coarsest quantization ladder level."""
+    deadline even at the coarsest quantization ladder level, or its
+    predicted per-token latency violated the TPOT SLO (``reason``)."""
     rid: int
     spec: RequestSpec
     t_shed_s: float                         # when admission rejected it
-    pred_ttft_s: float                      # the violating prediction
+    pred_ttft_s: float                      # the TTFT prediction
+    reason: str = "ttft"                    # which SLO leg shed ("tpot"?)
+    pred_tpot_s: Optional[float] = None     # the violating TPOT prediction
 
 
 @dataclasses.dataclass
@@ -231,7 +256,37 @@ class FleetReport:
             "queue_wait_mean_s": float(np.mean(waits)) if done else nan,
             "uplink_share_p50": pct(shares, 50),
             "uplink_share_p99": pct(shares, 99),
+            **self._decode_summary(),
             **self._slo_summary(),
+        }
+
+    def _decode_summary(self) -> dict:
+        """Decode-aware goodput block of :meth:`summary`.
+
+        ``goodput_tok_s`` counts every delivered token over the makespan
+        (first-token-only fleets deliver exactly one token per request —
+        the accounting fiction the decode phase replaces);
+        ``goodput_resp_s`` counts completed *full responses* per second
+        (== ``goodput_rps``, but over a makespan that now includes the
+        decode tail when decoding is on). TPOT stats cover requests that
+        actually decoded (> 1 token); ``None`` (not NaN, which would
+        poison ``==`` parity checks) when nothing decoded."""
+        toks = sum(r.n_tokens_out for r in self.records)
+        tpots = [r.tpot_s for r in self.records if r.n_tokens_out > 1]
+        ttlts = [r.ttlt_s for r in self.records]
+
+        def pct(vals, q):
+            return float(np.percentile(np.asarray(vals), q)) if vals else None
+
+        return {
+            "tokens_out_total": toks,
+            "goodput_tok_s": toks / self.makespan_s
+            if self.makespan_s else 0.0,
+            "goodput_resp_s": len(self.records) / self.makespan_s
+            if self.makespan_s else 0.0,
+            "tpot_p50_s": pct(tpots, 50),
+            "tpot_p99_s": pct(tpots, 99),
+            "ttlt_p99_s": pct(ttlts, 99),
         }
 
     def _slo_summary(self) -> dict:
@@ -248,10 +303,11 @@ class FleetReport:
         counts only requests that met their deadline (deadline-less
         requests always count) — the throughput the fleet delivered
         within contract."""
-        dl = [r for r in self.records if r.deadline_s is not None]
+        dl = [r for r in self.records if r.slo_met is not None]
         met = [r for r in dl if r.slo_met]
         n_dl_shed = sum(1 for s in self.shed
-                        if s.spec.deadline_s is not None)
+                        if s.spec.deadline_s is not None
+                        or s.spec.tpot_slo_s is not None)
         by_class: dict = {}
         for r in dl:
             by_class.setdefault(r.slo_class, []).append(r)
@@ -338,6 +394,14 @@ class ServingCluster:
         near-deadline flows are not migrated onto congested links.
         Requests without a deadline are untouched (bit-identical to
         ``slo=None``).
+    decode : a ``repro.serving.decode.DecodeConfig`` tuning the
+        per-device continuous decode batch (max batch, tokens per
+        dispatch, WFQ weight of the decode flow). Decoding itself is
+        armed per request by ``RequestSpec.max_new_tokens > 0`` — a
+        trace with ``max_new_tokens == 0`` everywhere is bit-identical
+        to pre-decode behaviour whether or not ``decode`` is set; a
+        decoding trace with ``decode=None`` uses ``DecodeConfig()``
+        defaults.
     bw_trace / bw_dt : optional explicit uplink trace (otherwise an OU
         trace is drawn from the network profile with ``bw_seed``).
     """
@@ -352,6 +416,7 @@ class ServingCluster:
                  nic_link: Optional[SharedLinkModel] = None,
                  slo: Optional["SLOPolicy"] = None,
                  policy_fn: Optional[Callable] = None,
+                 decode: Optional[DecodeConfig] = None,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
                  bw_seed: int = 991, seed: int = 0):
         self.cfg = cfg
@@ -372,6 +437,7 @@ class ServingCluster:
         self.nic_link = nic_link
         self.slo = slo
         self.policy_fn = policy_fn
+        self.decode_cfg = decode
         self.bw_trace = bw_trace
         self.bw_dt = bw_dt
         self.bw_seed = bw_seed
@@ -381,6 +447,7 @@ class ServingCluster:
         self._link_server: Optional[LinkTopology] = None
         self._run_queues: dict[int, DeviceRunQueue] = {}
         self._computing: dict[int, set] = {}
+        self._batchers: dict[int, DecodeBatcher] = {}
 
     # ---- telemetry surface (valid during run()) ----
     @property
@@ -406,6 +473,13 @@ class ServingCluster:
             rq = self._run_queues.get(device)
             return rq.backlog_s() if rq else 0.0
         return 0.0
+
+    def decode_occupancy(self, device: int = 0) -> int:
+        """Sequences decoding (or waiting to join the batch) on `device`
+        — the batch a newly admitted request should expect to share its
+        decode steps with (TPOT admission telemetry)."""
+        bat = self._batchers.get(device)
+        return bat.occupancy() if bat else 0
 
     # ---- contention signals ----
     def _coupled_util(self, device: int) -> float:
@@ -475,6 +549,12 @@ class ServingCluster:
                 deadline_floor_s=self.run_queue.deadline_floor_s)
             for d in range(self.n_devices)} if self.run_queue else {}
 
+        decode_cfg = self.decode_cfg if self.decode_cfg is not None \
+            else DecodeConfig()
+        self._batchers = {}
+        self._decode_free: dict[int, float] = {}    # closed-loop serializer
+        pending_decode: dict = {}     # queued dispatch key -> Dispatch
+
         active: dict[int, _ActiveRequest] = {}
         queue: list[tuple[int, RequestSpec]] = []
         records: list[RequestRecord] = []
@@ -493,6 +573,55 @@ class ServingCluster:
             nonlocal seq
             heapq.heappush(heap, (t0 + dur, seq, "compute_done", rid,
                                   (chunk, t0)))
+            seq += 1
+
+        def batcher(dev: int) -> DecodeBatcher:
+            if dev not in self._batchers:
+                self._batchers[dev] = DecodeBatcher(self.cfg, self.profile,
+                                                    decode_cfg)
+            return self._batchers[dev]
+
+        def start_jobs(dev: int, started):
+            """Jobs entering run-queue service: prefill chunks or decode
+            dispatches, told apart by key shape."""
+            nonlocal seq
+            for key, t0, dur in started:
+                if key[0] == "decode":
+                    d = pending_decode.pop(key)
+                    heapq.heappush(heap, (t0 + dur, seq, "decode_done",
+                                          key[1], (d, t0)))
+                    seq += 1
+                else:
+                    push_compute(key[0], key[1], t0, dur)
+
+        def submit_decode(dev: int):
+            """Plan the device's next decode dispatch (if any) and put it
+            on the device: through the run queue — where it competes with
+            queued prefill chunks under the discipline — or back-to-back
+            on the closed-loop decode serializer."""
+            nonlocal seq
+            bat = self._batchers.get(dev)
+            if bat is None:
+                return
+            d = bat.next_dispatch()
+            if d is None:
+                return
+            key = ("decode", dev, d.seq)
+            if self.run_queue is not None:
+                t0 = self._run_queues[dev].submit(
+                    key, d.duration_s, now, flow=("decode", dev),
+                    weight=decode_cfg.weight,
+                    remaining_s=max(bat.remaining_service_s(),
+                                    d.duration_s),
+                    deadline_s=bat.min_deadline())
+                if t0 is None:
+                    pending_decode[key] = d
+                    return
+            else:
+                t0 = max(now, self._decode_free.get(dev, 0.0))
+                self._decode_free[dev] = t0 + d.duration_s
+            heapq.heappush(heap, (t0 + d.duration_s, seq, "decode_done",
+                                  dev, (d, t0)))
             seq += 1
 
         def drive(st: _ActiveRequest, reply=None, *, prime: bool = False):
@@ -527,6 +656,14 @@ class ServingCluster:
                             push_compute(st.rid, ev.chunk, now,
                                          ev.duration_s)
                             ev = st.gen.send(StartAck(now))
+                    elif isinstance(ev, DecodeStart):
+                        # context assembled: join the device's continuous
+                        # decode batch (token-boundary join)
+                        batcher(dev).enroll(st.rid, ev.context_len,
+                                            ev.n_tokens,
+                                            deadline_s=st.deadline_abs)
+                        submit_decode(dev)
+                        ev = st.gen.send(None)
                     else:
                         assert isinstance(ev, Wait)
                         return None
@@ -547,12 +684,15 @@ class ServingCluster:
             weight = spec.weight
             downgraded = False
             pred_ttft = None
-            if self.slo is not None and spec.deadline_s is not None:
+            if self.slo is not None and (spec.deadline_s is not None
+                                         or spec.tpot_slo_s is not None):
                 dec = decide_admission(self.slo, plan, self, spec, now)
                 pred_ttft = dec.pred_ttft_s
                 if dec.action == "shed":
                     shed.append(ShedRecord(rid=rid, spec=spec, t_shed_s=now,
-                                           pred_ttft_s=dec.pred_ttft_s))
+                                           pred_ttft_s=dec.pred_ttft_s,
+                                           reason=dec.reason,
+                                           pred_tpot_s=dec.pred_tpot_s))
                     return False
                 if dec.bits < plan.quality_bits:
                     # coarser stream quantization: fewer bytes on the
@@ -564,6 +704,7 @@ class ServingCluster:
                     downgraded = True
                 if (self.run_queue is not None
                         and self.run_queue.discipline == "wfq"
+                        and deadline_abs is not None
                         and weight == 1.0):
                     weight = self.slo.weight_for_slack(deadline_abs - now)
             if self.slo is not None and deadline_abs is not None \
@@ -583,7 +724,8 @@ class ServingCluster:
                 gt=gt, profile=self.profile, bw=integrator,
                 cfg_model=self.cfg, util=self.static_util,
                 controller=plan.controller,
-                seed=self.seed + spec.seed)
+                seed=self.seed + spec.seed,
+                max_new_tokens=spec.max_new_tokens)
             comp_total = plan_compute_seconds(plan)
             st = _ActiveRequest(rid=rid, spec=spec, plan=plan,
                                 gen=eng.session(
@@ -609,6 +751,15 @@ class ServingCluster:
             self._computing[st.spec.device].discard(st.rid)
             quality = B._mixed_quality(res, st.plan.quality_bits)
             ttft = res.ttft_s - arrival_s[st.rid]
+            ttlt = res.ttlt_s - arrival_s[st.rid]
+            met = None
+            if st.spec.deadline_s is not None \
+                    or st.spec.tpot_slo_s is not None:
+                met = True
+                if st.spec.deadline_s is not None:
+                    met = met and ttft <= st.spec.deadline_s
+                if st.spec.tpot_slo_s is not None and res.n_tokens_out > 1:
+                    met = met and res.tpot_s <= st.spec.tpot_slo_s
             records.append(RequestRecord(
                 rid=st.rid, spec=st.spec, policy=st.plan.policy,
                 admit_s=st.admit_s, context_done_s=res.context_done_s,
@@ -626,17 +777,21 @@ class ServingCluster:
                 uplink_share=link_server.mean_share(st.rid),
                 slo_class=st.spec.slo_class,
                 deadline_s=st.spec.deadline_s,
-                slo_met=(ttft <= st.spec.deadline_s
-                         if st.spec.deadline_s is not None else None),
+                slo_met=met,
                 quant_bits=st.plan.quality_bits,
-                downgraded=st.downgraded))
-            makespan = max(makespan, res.ttft_s)
+                downgraded=st.downgraded,
+                n_tokens_out=res.n_tokens_out, ttlt_s=ttlt,
+                tpot_s=res.tpot_s, tpot_slo_s=st.spec.tpot_slo_s))
+            # decode-off: res.ttlt_s == res.ttft_s, so the makespan is
+            # unchanged from first-token accounting
+            makespan = max(makespan, res.ttlt_s)
             while queue:
                 if admit(*queue.pop(0)):
                     break
 
         guard = 0
-        limit = 1000 + 200 * sum(w.n_t * w.n_l * max(w.n_h, 1) for w in wls)
+        limit = 1000 + 200 * sum(w.n_t * w.n_l * max(w.n_h, 1) for w in wls) \
+            + 50 * sum(s.max_new_tokens for s in specs)
         while heap or link_server.n_active():
             guard += 1
             if guard > limit:
@@ -672,13 +827,33 @@ class ServingCluster:
                 if self.run_queue is not None:
                     started = self._run_queues[st.spec.device].complete(
                         (rid, chunk), t)
-                    for (rid2, chunk2), t02, dur2 in started:
-                        push_compute(rid2, chunk2, t02, dur2)
+                    start_jobs(st.spec.device, started)
                 else:
                     self._computing[st.spec.device].discard(rid)
                 res = drive(st, Completion("compute", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
+            elif kind == "decode_done":
+                dev = rid                      # decode events carry the
+                d, t0 = payload                # device in the rid slot
+                bat = self._batchers[dev]
+                started = self._run_queues[dev].complete(
+                    ("decode", dev, d.seq), t) \
+                    if self.run_queue is not None else []
+                bat.dispatch_done()
+                start_jobs(dev, started)
+                # deliver this dispatch's tokens to every member session
+                for r in sorted(d.token_offsets):
+                    st = active[r]
+                    times = tuple(t0 + off for off in d.token_offsets[r])
+                    cls = DecodeDone if r in d.finished else DecodeTick
+                    res = drive(st, cls(
+                        t_start=t0, t_end=t, token_times=times,
+                        batch_size=d.batch_size,
+                        busy_share_s=d.busy_share[r]))
+                    if res is not None:
+                        finalize(st, res)
+                submit_decode(dev)
             elif kind == "stream_avail":
                 chunk, t0 = payload
                 st = active[rid]
@@ -687,11 +862,14 @@ class ServingCluster:
                 if res is not None:
                     finalize(st, res)
         assert not active and not queue, "cluster finished with stuck work"
+        assert all(b.idle() for b in self._batchers.values()), \
+            "cluster finished with undrained decode batches"
         # clear the whole telemetry surface so a reused cluster never
         # exposes one run's end-state to the next run's policy_fn
         self._link_server = None
         self._run_queues = {}
         self._computing = {}
+        self._batchers = {}
         return FleetReport(records=sorted(records, key=lambda r: r.rid),
                            makespan_s=makespan, n_arrived=len(specs),
                            shed=sorted(shed, key=lambda s: s.rid))

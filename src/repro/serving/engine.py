@@ -225,6 +225,8 @@ class SparKVServer:
                     max_concurrency: Optional[int] = None,
                     link=None, run_queue=None, policy_fn=None,
                     slo=None, deadline_s: Optional[float] = None,
+                    max_new_tokens: int = 0, decode=None,
+                    tpot_slo_s: Optional[float] = None,
                     bw_seed: int = 991):
         """Serve many registered contexts concurrently on one clock.
 
@@ -239,7 +241,12 @@ class SparKVServer:
         live telemetry at admission. An ``repro.serving.slo.SLOPolicy``
         as ``slo`` (with ``deadline_s`` applied to every job) arms
         deadline-aware admission: downgrade-or-shed on predicted TTFT
-        violation. Returns a FleetReport.
+        violation. ``max_new_tokens > 0`` keeps every request alive past
+        its first token: responses decode through the per-device
+        continuous batch (tune it with a
+        ``repro.serving.decode.DecodeConfig`` as ``decode``; an optional
+        ``tpot_slo_s`` arms per-token admission under ``slo``). Returns
+        a FleetReport.
         """
         from repro.serving.cluster import RequestSpec, ServingCluster
         specs = []
@@ -247,14 +254,15 @@ class SparKVServer:
             st = self.contexts[cid]
             specs.append(RequestSpec(
                 arrival_s=arrival_s, context_len=st.wl.context_len,
-                policy=policy, seed=i, wl=st.wl, deadline_s=deadline_s))
+                policy=policy, seed=i, wl=st.wl, deadline_s=deadline_s,
+                max_new_tokens=max_new_tokens, tpot_slo_s=tpot_slo_s))
         cluster = ServingCluster(
             self.model.cfg, self.spcfg, self.profile, self.network,
             capacity=self.capacity,
             max_concurrency=max_concurrency or self.capacity,
             closed_loop=closed_loop, static_util=static_util,
             link=link, run_queue=run_queue, policy_fn=policy_fn,
-            slo=slo, bw_seed=bw_seed, seed=self.seed)
+            slo=slo, decode=decode, bw_seed=bw_seed, seed=self.seed)
         return cluster.run(specs)
 
     def _decode(self, st: StoredContext, cache, prompt, max_new):

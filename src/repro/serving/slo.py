@@ -20,9 +20,16 @@ mechanisms the cluster composes on top of the resource servers:
     classes, so "interactive vs. background" falls out of the deadlines
     instead of hand-set weights.
 
-Requests without a deadline bypass all three mechanisms: a cluster with
-``slo=SLOPolicy()`` but no deadlines in the trace is bit-identical to one
-without the policy (tested in tests/test_cluster.py).
+With continuous batched decoding armed (``RequestSpec.max_new_tokens >
+0``), a request may additionally carry a **TPOT SLO**
+(``RequestSpec.tpot_slo_s``): :func:`predict_tpot` projects the batched
+per-token latency against the device's live decode occupancy, and a
+predicted violation sheds at admission — the quantization ladder cannot
+help there, since decode-step cost is independent of streamed bitrate.
+
+Requests without a deadline (TTFT or TPOT) bypass all mechanisms: a
+cluster with ``slo=SLOPolicy()`` but no deadlines in the trace is
+bit-identical to one without the policy (tested in tests/test_cluster.py).
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ from typing import Optional
 
 from repro.compression.quantize import downgrade_ladder
 from repro.core.costs import t_stream as chunk_stream_seconds
-from repro.core.engine import decode_first_token_seconds
+from repro.core.engine import decode_first_token_seconds, decode_step_seconds
 from repro.core.predictor import backlog_delay_s
 
 
@@ -82,6 +89,8 @@ class AdmissionDecision:
     bits: int                   # effective stream quantization bits
     pred_ttft_s: float          # the prediction that justified `action`
     downgraded: bool = False
+    reason: str = "ttft"        # which SLO leg decided ("ttft" | "tpot")
+    pred_tpot_s: Optional[float] = None
 
 
 def plan_compute_seconds(plan) -> float:
@@ -154,16 +163,53 @@ def predict_ttft(plan, cluster, spec, now: float, *,
     return (now - spec.arrival_s) + max(t_stream, t_comp) + t_first
 
 
+def predict_tpot(cluster, spec, context_len: int) -> float:
+    """Projected per-token decode latency if `spec` is admitted now: one
+    batched decode step over the device's current decode occupancy plus
+    this request, every sequence at this request's mid-response context
+    length. Conservative in the same way batching is: joiners raise the
+    step cost only through their KV reads, the weight-read term stays
+    amortized. Quality downgrades do not enter — decode-step cost is
+    independent of the streamed bitrate, so a TPOT violation cannot be
+    downgraded away, only shed."""
+    from repro.serving.decode import DecodeConfig
+    dcfg = getattr(cluster, "decode_cfg", None) or DecodeConfig()
+    b = min(cluster.decode_occupancy(spec.device) + 1, dcfg.max_batch)
+    mid_len = context_len + max(spec.max_new_tokens, 1) // 2
+    return decode_step_seconds(cluster.cfg, [mid_len] * b, cluster.profile)
+
+
 def decide_admission(policy: SLOPolicy, plan, cluster, spec,
                      now: float) -> AdmissionDecision:
-    """Admit / downgrade / shed `spec` against its TTFT deadline.
+    """Admit / downgrade / shed `spec` against its TTFT deadline and —
+    when the request decodes under a ``tpot_slo_s`` — its TPOT SLO.
 
-    Walks the quantization ladder finest-first: the first bit-width whose
-    predicted TTFT (with `policy.headroom`) meets the deadline wins.
-    When none does, the request is shed (``policy.shed``) or admitted
-    best-effort at the coarsest level.
+    TTFT leg: walks the quantization ladder finest-first; the first
+    bit-width whose predicted TTFT (with `policy.headroom`) meets the
+    deadline wins. When none does, the request is shed (``policy.shed``)
+    or admitted best-effort at the coarsest level. TPOT leg: a predicted
+    per-token violation sheds outright (coarser bits don't speed decode).
     """
-    assert spec.deadline_s is not None, "decide_admission needs a deadline"
+    assert spec.deadline_s is not None or spec.tpot_slo_s is not None, \
+        "decide_admission needs a TTFT deadline or a TPOT SLO"
+
+    if spec.deadline_s is None:
+        dec = AdmissionDecision("admit", plan.quality_bits,
+                                predict_ttft(plan, cluster, spec, now))
+    else:
+        dec = _decide_ttft(policy, plan, cluster, spec, now)
+    if (dec.action == "admit" and policy.shed
+            and spec.tpot_slo_s is not None and spec.max_new_tokens > 0):
+        pred_tpot = predict_tpot(cluster, spec, plan.context_len)
+        if pred_tpot * policy.headroom > spec.tpot_slo_s:
+            return dataclasses.replace(dec, action="shed", reason="tpot",
+                                       pred_tpot_s=pred_tpot)
+        dec = dataclasses.replace(dec, pred_tpot_s=pred_tpot)
+    return dec
+
+
+def _decide_ttft(policy: SLOPolicy, plan, cluster, spec,
+                 now: float) -> AdmissionDecision:
     deadline = spec.deadline_s
 
     pred = predict_ttft(plan, cluster, spec, now)

@@ -21,9 +21,15 @@ from ``weight_mix`` (interactive vs. background service classes).
 SLO classes: ``slo_mix`` draws a named service class per request, each
 carrying a TTFT deadline (or ``None`` for best-effort) — e.g. a 70/30
 interactive/batch split where only interactive requests have deadlines.
-The cluster's SLO admission layer (``repro.serving.slo``) consumes the
+4-tuple entries add a per-token TPOT SLO for the decode phase. The
+cluster's SLO admission layer (``repro.serving.slo``) consumes the
 deadlines; the class name is the reporting bucket for per-class
 attainment in the ``FleetReport``.
+
+Decode: ``out_len_mix`` draws a response length per request (chat
+replies vs. long generations), setting ``RequestSpec.max_new_tokens`` so
+the fleet's continuous decode batches carry a realistic length mix; an
+empty mix keeps every spec first-token-only.
 """
 from __future__ import annotations
 
@@ -54,8 +60,12 @@ class TrafficProfile:
     # resource-server routing
     n_devices: int = 1                  # round-robin device assignment
     weight_mix: tuple = ((1.0, 1.0),)   # (wfq weight, draw weight)
-    # SLO classes: (class name, ttft deadline_s | None, draw weight)
+    # SLO classes: (class name, ttft deadline_s | None, draw weight) or
+    # (class name, ttft deadline_s | None, tpot_slo_s | None, draw weight)
     slo_mix: tuple = ()                 # empty = no deadlines
+    # decode: response-length classes (n output tokens, draw weight);
+    # empty = first-token-only fleets (max_new_tokens 0 on every spec)
+    out_len_mix: tuple = ()
 
 
 def _arrival_times(profile: TrafficProfile, n: int,
@@ -100,8 +110,13 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
     wfq_p /= wfq_p.sum()
     slo_p = None
     if profile.slo_mix:
-        slo_p = np.array([w for _, _, w in profile.slo_mix], float)
+        slo_p = np.array([e[-1] for e in profile.slo_mix], float)
         slo_p /= slo_p.sum()
+    out_lens = [int(n) for n, _ in profile.out_len_mix]
+    out_p = None
+    if profile.out_len_mix:
+        out_p = np.array([w for _, w in profile.out_len_mix], float)
+        out_p /= out_p.sum()
     specs = []
     for i, t in enumerate(arrivals):
         ds_name = _weighted(profile.context_mix, rng)
@@ -111,15 +126,23 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
         ctx = max(profile.chunk_tokens,
                   int(raw // profile.chunk_tokens) * profile.chunk_tokens)
         wfq_w = float(wfq_weights[rng.choice(len(wfq_weights), p=wfq_p)])
-        slo_class, deadline = "default", None
+        slo_class, deadline, tpot_slo = "default", None, None
         if slo_p is not None:
-            slo_class, deadline, _ = profile.slo_mix[
+            entry = profile.slo_mix[
                 rng.choice(len(profile.slo_mix), p=slo_p)]
+            if len(entry) == 4:          # (name, ttft, tpot, weight)
+                slo_class, deadline, tpot_slo, _ = entry
+            else:                        # legacy (name, ttft, weight)
+                slo_class, deadline, _ = entry
+        max_new = 0
+        if out_p is not None:
+            max_new = out_lens[rng.choice(len(out_lens), p=out_p)]
         specs.append(RequestSpec(
             arrival_s=float(t), context_len=ctx, dataset=ds_name,
             policy=_weighted(profile.policy_mix, rng), seed=seed + i,
             device=i % max(profile.n_devices, 1), weight=wfq_w,
-            deadline_s=deadline, slo_class=slo_class))
+            deadline_s=deadline, slo_class=slo_class,
+            max_new_tokens=max_new, tpot_slo_s=tpot_slo))
     return specs
 
 

@@ -1,0 +1,49 @@
+"""Strategy objects for the deterministic hypothesis stub: each carries
+a ``sample(rng)`` draw plus explicit ``edges`` (boundary values tried
+first by ``given``). Only the strategies the repo's suites use."""
+from __future__ import annotations
+
+
+class _Strategy:
+    def __init__(self, sample, edges=()):
+        self._sample = sample
+        self.edges = tuple(edges)
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        edges=(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        edges=(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                     edges=(False, True))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    assert seq, "sampled_from needs a non-empty sequence"
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))],
+                     edges=(seq[0], seq[-1]))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))

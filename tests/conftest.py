@@ -5,6 +5,14 @@ import sys
 # own XLA_FLAGS in its subprocess (never globally — see system docs)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# hypothesis suites must run everywhere: CI installs the real package;
+# containers without it fall back to the deterministic stub under
+# tests/_vendor (same API slice, fixed seeds, boundary examples first)
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
+
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 

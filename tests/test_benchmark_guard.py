@@ -1,0 +1,60 @@
+"""Benchmark quick-run output guard: ``--quick`` smoke runs must never
+overwrite checked-in full-run results (they use reduced workloads, so
+their numbers are not comparable — see benchmarks/common.py)."""
+import ast
+import os
+import re
+
+import benchmarks.common as common
+
+BENCH_DIR = os.path.dirname(common.__file__)
+
+
+def test_quick_save_routes_to_quick_dir(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    monkeypatch.setattr(common, "QUICK_DIR", str(tmp_path / "quick"))
+    full = common.save("x", {"rows": [1]})
+    quick = common.save("x", {"rows": [1]}, quick=True)
+    assert os.path.normpath(full) != os.path.normpath(quick)
+    assert os.sep + "quick" + os.sep in quick
+    assert os.path.exists(full) and os.path.exists(quick)
+    # a quick re-run never touches the full-run file
+    before = os.path.getmtime(full)
+    common.save("x", {"rows": [2]}, quick=True)
+    assert os.path.getmtime(full) == before
+
+
+def test_quick_results_never_alias_checked_in_paths(tmp_path, monkeypatch):
+    """Same bench name, quick vs full: distinct directories, and the
+    quick directory is git-ignored so nothing under it can be checked
+    in by accident."""
+    root = os.path.dirname(BENCH_DIR)
+    with open(os.path.join(root, ".gitignore")) as f:
+        assert "results/benchmarks/quick/" in f.read()
+    assert os.path.normpath(common.QUICK_DIR).startswith(
+        os.path.normpath(common.RESULTS_DIR))
+
+
+def test_every_bench_threads_quick_through_save():
+    """Static guard: every ``save(...)`` call in benchmarks/ passes the
+    ``quick`` flag, so no future bench silently reverts to clobbering
+    full-run results on --quick."""
+    offenders = []
+    for fname in sorted(os.listdir(BENCH_DIR)):
+        if not fname.startswith("bench_") or not fname.endswith(".py"):
+            continue
+        path = os.path.join(BENCH_DIR, fname)
+        with open(path) as f:
+            tree = ast.parse(f.read())
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else \
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            if name != "save":
+                continue
+            if not any(kw.arg == "quick" for kw in node.keywords):
+                offenders.append(f"{fname}:{node.lineno}")
+    assert not offenders, \
+        f"save() calls missing quick= passthrough: {offenders}"

@@ -1,7 +1,8 @@
 """Huffman codec + quantization properties (hypothesis)."""
 import numpy as np
-import pytest
-pytest.importorskip("hypothesis")   # optional dep: skip suite if absent
+import pytest  # noqa: F401
+# real hypothesis in CI; deterministic stub from tests/_vendor otherwise
+# (wired by conftest.py) — the suite never skips
 from hypothesis import given, settings, strategies as st
 
 from repro.compression import huffman as H
@@ -9,7 +10,7 @@ from repro.compression.quantize import (BITRATE_LEVELS, layerwise_bits,
                                         quant_error, quantize)
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=25, deadline=None, derandomize=True)
 @given(st.integers(1, 20000), st.integers(2, 6), st.integers(1, 64),
        st.floats(0.2, 6.0))
 def test_huffman_roundtrip(n, bits, streams, skew):
@@ -45,7 +46,7 @@ def test_huffman_empty():
     assert len(H.decode(enc)) == 0
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=20, deadline=None, derandomize=True)
 @given(st.integers(2, 8), st.sampled_from([16, 32, 64, 128]))
 def test_quantize_error_bound(bits, group):
     rng = np.random.default_rng(bits * group)

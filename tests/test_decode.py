@@ -1,0 +1,296 @@
+"""Continuous batched decode: step cost model, DecodeBatcher unit
+behaviour, decode-off parity with the pre-decode fleet, and end-to-end
+cluster runs where decode contends with prefill on the run queue."""
+import numpy as np
+import pytest
+
+from repro.configs import SparKVConfig, get_config
+from repro.core.costs import PROFILES, RunQueueModel
+from repro.core.engine import (decode_first_token_seconds,
+                               decode_step_seconds)
+from repro.serving.cluster import RequestSpec, ServingCluster
+from repro.serving.decode import DecodeBatcher, DecodeConfig
+from repro.serving.traffic import TrafficProfile, generate_trace
+
+CFG = get_config("sparkv-qwen3-4b")
+SP = SparKVConfig(scheduler_mode="engine")
+PROF = PROFILES["jetson-orin"]
+CTX = 4096
+
+
+def make_cluster(**kw):
+    kw.setdefault("max_concurrency", 8)
+    return ServingCluster(CFG, SP, "jetson-orin", "campus-wifi", **kw)
+
+
+# ---------------------------------------------------------------------------
+# batched-step cost model
+# ---------------------------------------------------------------------------
+
+def test_step_cost_batch_of_one_matches_first_token():
+    """The batched model is calibrated to the analytic first-token cost:
+    a batch of one at the assembled context length is the same forward."""
+    for ctx in (1024, 4096, 16384):
+        assert np.isclose(decode_step_seconds(CFG, [ctx], PROF),
+                          decode_first_token_seconds(CFG, ctx, PROF),
+                          rtol=1e-9)
+
+
+def test_step_cost_amortizes_weights_across_batch():
+    """Per-token cost strictly improves with batching (weight reads are
+    paid once per step), while the step itself grows with every member's
+    KV reads and compute."""
+    solo = decode_step_seconds(CFG, [CTX], PROF)
+    for b in (2, 4, 8):
+        step = decode_step_seconds(CFG, [CTX] * b, PROF)
+        assert step > solo                      # more work per step
+        assert step / b < solo                  # cheaper per token
+    # longer contexts cost more (KV reads scale with length)
+    assert decode_step_seconds(CFG, [2 * CTX], PROF) > solo
+
+
+# ---------------------------------------------------------------------------
+# DecodeBatcher
+# ---------------------------------------------------------------------------
+
+def test_batcher_token_boundary_join_and_leave():
+    bat = DecodeBatcher(CFG, PROF, DecodeConfig(max_batch=2))
+    bat.enroll(0, CTX, n_tokens=2)
+    d0 = bat.next_dispatch()
+    assert d0.batch_size == 1 and bat.next_dispatch() is None  # one in flight
+    bat.enroll(1, CTX, n_tokens=3)            # joins at next boundary
+    bat.enroll(2, CTX, n_tokens=1)            # batch full -> waits
+    assert bat.occupancy() == 3
+    bat.dispatch_done()
+    d1 = bat.next_dispatch()                  # rid 1 joined; rid 0 finishes
+    assert d1.batch_size == 2 and set(d1.token_offsets) == {0, 1}
+    assert d1.finished == (0,)
+    bat.dispatch_done()
+    d2 = bat.next_dispatch()                  # rid 2 promoted into the slot
+    assert set(d2.token_offsets) == {1, 2} and d2.finished == (2,)
+    bat.dispatch_done()
+    d3 = bat.next_dispatch()
+    assert set(d3.token_offsets) == {1} and d3.finished == (1,)
+    bat.dispatch_done()
+    assert bat.idle() and bat.next_dispatch() is None
+
+
+def test_batcher_multi_token_dispatch_shrinks_batch():
+    """tokens_per_dispatch > 1: members who hit their quota mid-dispatch
+    stop contributing to later sub-steps; offsets stay monotone and the
+    busy shares tile the dispatch duration exactly."""
+    bat = DecodeBatcher(CFG, PROF, DecodeConfig(max_batch=4,
+                                                tokens_per_dispatch=3))
+    bat.enroll(0, CTX, n_tokens=1)
+    bat.enroll(1, CTX, n_tokens=3)
+    d = bat.next_dispatch()
+    assert len(d.token_offsets[0]) == 1 and len(d.token_offsets[1]) == 3
+    offs = d.token_offsets[1]
+    assert all(b > a for a, b in zip(offs, offs[1:]))
+    assert d.finished == (0, 1)
+    assert np.isclose(sum(d.busy_share.values()), d.duration_s)
+    # sub-step 1 shared by two members, later ones solo: rid 1 pays more
+    assert d.busy_share[1] > d.busy_share[0]
+
+
+# ---------------------------------------------------------------------------
+# decode-off parity regression (guards the whole refactor)
+# ---------------------------------------------------------------------------
+
+def test_decode_off_traces_bit_identical():
+    """With max_new_tokens == 0 everywhere, arming the decode layer (any
+    DecodeConfig) must leave the fleet trace bit-identical to a cluster
+    that never heard of decoding — records, TTFTs, summaries, shed and
+    downgrade counts. Same pattern as PR 3's no-deadline parity test."""
+    from repro.serving.slo import SLOPolicy
+    specs = [RequestSpec(arrival_s=0.0, context_len=2 * CTX,
+                         policy="sparkv", seed=0, slo_class="batch")]
+    specs += [RequestSpec(arrival_s=0.4 * i, context_len=CTX,
+                          policy="sparkv", seed=i, deadline_s=5.0,
+                          slo_class="interactive")
+              for i in range(1, 5)]
+    for kw in ({"run_queue": RunQueueModel(1, "fifo")},
+               {"run_queue": RunQueueModel(2, "wfq"),
+                "slo": SLOPolicy()},
+               {"closed_loop": True}):
+        base = make_cluster(**kw).run(specs)
+        armed = make_cluster(decode=DecodeConfig(max_batch=4,
+                                                 tokens_per_dispatch=2),
+                             **kw).run(specs)
+        assert base.records == armed.records, kw
+        assert base.summary() == armed.summary(), kw
+        assert base.shed == armed.shed, kw
+        assert [r.ttft_s for r in base.records] \
+            == [r.ttft_s for r in armed.records], kw
+        # first-token-only accounting: exactly one token per response
+        assert all(r.n_tokens_out == 1 and r.ttlt_s == r.ttft_s
+                   for r in armed.records), kw
+
+
+# ---------------------------------------------------------------------------
+# cluster end-to-end
+# ---------------------------------------------------------------------------
+
+def test_decode_fleet_delivers_full_responses():
+    n_tok = 12
+    specs = [RequestSpec(arrival_s=0.3 * i, context_len=CTX,
+                         policy="sparkv", seed=i, max_new_tokens=n_tok)
+             for i in range(4)]
+    rep = make_cluster(run_queue=RunQueueModel(1, "fifo"),
+                       decode=DecodeConfig(max_batch=4)).run(specs)
+    assert len(rep.records) == 4
+    for r in rep.records:
+        assert r.n_tokens_out == n_tok
+        assert r.ttlt_s > r.ttft_s            # decode tail is real time
+        assert r.tpot_s > 0
+    s = rep.summary()
+    assert s["tokens_out_total"] == 4 * n_tok
+    assert np.isclose(s["goodput_tok_s"],
+                      4 * n_tok / rep.makespan_s)
+    assert s["tpot_p50_s"] is not None and s["ttlt_p99_s"] > 0
+    # makespan covers the decode tail: last token, not first
+    assert rep.makespan_s >= max(r.spec.arrival_s + r.ttlt_s
+                                 for r in rep.records) - 1e-9
+
+
+def test_decode_energy_covers_tail():
+    """The decode phase consumes device time, so a decoding fleet spends
+    strictly more energy per request than its first-token-only twin."""
+    base = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                        seed=0)]
+    dec = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                       seed=0, max_new_tokens=32)]
+    kw = dict(run_queue=RunQueueModel(1, "fifo"))
+    e0 = make_cluster(**kw).run(base).records[0].energy_j
+    e1 = make_cluster(**kw).run(dec).records[0].energy_j
+    assert e1 > e0
+
+
+def test_continuous_batching_beats_serial_goodput():
+    """Overloaded device, simultaneous arrivals: sharing decode steps
+    (max_batch > 1) must deliver more tokens/s than serializing whole
+    responses (max_batch == 1) — the amortization the batcher exists
+    for."""
+    specs = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                         seed=i, max_new_tokens=24) for i in range(6)]
+    kw = dict(run_queue=RunQueueModel(1, "fifo"))
+    serial = make_cluster(decode=DecodeConfig(max_batch=1), **kw).run(specs)
+    batched = make_cluster(decode=DecodeConfig(max_batch=8), **kw).run(specs)
+    assert batched.summary()["goodput_tok_s"] \
+        > serial.summary()["goodput_tok_s"]
+    assert batched.makespan_s < serial.makespan_s
+
+
+def test_decode_contends_with_prefill_on_run_queue():
+    """A long decode stream on the device delays a later request's
+    prefill chunks (they share the FIFO run queue), compared to the same
+    arrival on a device with no decode load."""
+    early = RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                        seed=0, max_new_tokens=64)
+    late = RequestSpec(arrival_s=1.0, context_len=CTX,
+                       policy="local_prefill", seed=1)
+    kw = dict(run_queue=RunQueueModel(1, "fifo"))
+    with_decode = make_cluster(**kw).run([early, late])
+    no_decode = make_cluster(**kw).run(
+        [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                     seed=0), late])
+    t_with = [r for r in with_decode.records if r.rid == 1][0]
+    t_wo = [r for r in no_decode.records if r.rid == 1][0]
+    assert t_with.compute_wait_s > t_wo.compute_wait_s
+    assert t_with.ttft_s > t_wo.ttft_s
+
+
+def test_single_request_run_decodes_serially():
+    """HybridEngine.run() (exclusive device) serves the decode phase as
+    back-to-back batch-of-1 steps over the growing context."""
+    from repro.core import baselines as B
+    from repro.core.costs import NETWORKS
+    from repro.data.workloads import DATASETS, synthesize
+    wl = synthesize(CFG, CTX, DATASETS["triviaqa"],
+                    chunk_tokens=SP.chunk_tokens, quant_bits=SP.quant_bits)
+    net = NETWORKS["campus-wifi"]
+    ref = B.run_strong_hybrid(CFG, wl, "jetson-orin", net, SP, seed=0)
+    plan = B.plan_policy("strong_hybrid", CFG, wl, "jetson-orin", net, SP)
+    eng = ref.engine  # result object; rebuild an engine from the plan
+    from repro.core.costs import GroundTruthLatency
+    from repro.core.engine import BandwidthIntegrator, HybridEngine
+    rng = np.random.default_rng(991)
+    trace = net.trace(rng, 60.0)
+    n_tok = 8
+    eng2 = HybridEngine(
+        grid=plan.grid, chunk_bytes=plan.bytes_map,
+        active_blocks=plan.active_map,
+        t_comp_pred={c: plan.planner.tc[i]
+                     for i, c in enumerate(plan.grid.chunks())},
+        gt=GroundTruthLatency(PROF, CFG.resolved_head_dim),
+        profile=PROF, bw=BandwidthIntegrator(trace, 0.01),
+        cfg_model=CFG, max_new_tokens=n_tok)
+    res = eng2.run(plan.schedule, context_len=plan.context_len)
+    assert res.n_tokens_out == n_tok
+    assert len(res.token_times) == n_tok
+    # token 0 lands one first-token-equivalent step after context done
+    assert np.isclose(res.ttft_s - res.context_done_s,
+                      decode_step_seconds(CFG, [plan.context_len], PROF))
+    gaps = np.diff(res.token_times)
+    assert (gaps > 0).all()
+    assert res.ttlt_s == res.token_times[-1]
+
+
+# ---------------------------------------------------------------------------
+# traffic + SLO integration
+# ---------------------------------------------------------------------------
+
+def test_traffic_out_len_mix_draws_lengths():
+    prof = TrafficProfile(rate_rps=1.0, arrival="poisson",
+                          out_len_mix=((8, 0.5), (64, 0.5)),
+                          slo_mix=(("interactive", 5.0, 0.08, 0.5),
+                                   ("batch", None, 0.5)))
+    specs = generate_trace(prof, 40, seed=7)
+    lens = {s.max_new_tokens for s in specs}
+    assert lens == {8, 64}
+    ints = [s for s in specs if s.slo_class == "interactive"]
+    bats = [s for s in specs if s.slo_class == "batch"]
+    assert ints and bats
+    assert all(s.deadline_s == 5.0 and s.tpot_slo_s == 0.08 for s in ints)
+    assert all(s.deadline_s is None and s.tpot_slo_s is None for s in bats)
+
+
+def test_tpot_slo_sheds_when_step_too_slow():
+    """A TPOT SLO below the single-sequence step time is unmeetable: the
+    admission layer must shed rather than admit a guaranteed violator;
+    a loose TPOT SLO admits and the verdict covers the decode phase."""
+    from repro.serving.slo import SLOPolicy
+    step = decode_step_seconds(CFG, [CTX], PROF)
+    tight = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                         seed=0, max_new_tokens=8, tpot_slo_s=step / 10)]
+    rep = make_cluster(run_queue=RunQueueModel(1, "fifo"),
+                       slo=SLOPolicy()).run(tight)
+    assert len(rep.shed) == 1 and not rep.records
+    loose = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                         seed=0, max_new_tokens=8, tpot_slo_s=step * 50)]
+    rep2 = make_cluster(run_queue=RunQueueModel(1, "fifo"),
+                        slo=SLOPolicy()).run(loose)
+    r = rep2.records[0]
+    assert r.slo_met is True and r.tpot_slo_s == step * 50
+    assert rep2.summary()["slo_attainment"] == 1.0
+
+
+def test_decode_respects_wfq_weight():
+    """The decode flow competes under WFQ with its configured weight: a
+    tiny decode weight lets a later prefill burst through faster than a
+    heavy decode weight does. (Needs a queue deeper than one: several
+    prefill flows keep multiple candidates queued at each dispatch, so
+    the weighted pick is actually exercised.)"""
+    specs = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="sparkv",
+                         seed=0, max_new_tokens=96)]
+    specs += [RequestSpec(arrival_s=1.0, context_len=CTX,
+                          policy="local_prefill", seed=i, weight=1.0)
+              for i in range(1, 4)]
+    out = {}
+    for w in (0.1, 8.0):
+        rep = make_cluster(run_queue=RunQueueModel(1, "wfq"),
+                           decode=DecodeConfig(max_batch=4, weight=w)
+                           ).run(specs)
+        out[w] = float(np.mean([r.ttft_s for r in rep.records
+                                if r.rid >= 1]))
+    assert out[0.1] < out[8.0]

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # optional dep: skip suite if absent
+# real hypothesis in CI; deterministic stub from tests/_vendor otherwise
+# (wired by conftest.py) — the suite never skips
 from hypothesis import given, settings, strategies as st
 
 from repro.compression.quantize import dequantize, quantize
@@ -112,7 +113,7 @@ def test_kv_dequant_vs_ref(n, width, group, bits, rng):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=15, deadline=None, derandomize=True)
 @given(st.integers(50, 4000), st.integers(2, 8), st.sampled_from([32, 64]))
 def test_dequant_roundtrip_hypothesis(n_vals, bits, group):
     rng = np.random.default_rng(n_vals * 31 + bits)
@@ -125,7 +126,7 @@ def test_dequant_roundtrip_hypothesis(n_vals, bits, group):
     assert np.abs(host - x).max() <= qt.scales.max() * 0.51 + 1e-6
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=10, deadline=None, derandomize=True)
 @given(st.integers(1, 3), st.integers(128, 512), st.booleans())
 def test_block_sparse_hypothesis(bh, s, causal):
     s = (s // 128) * 128

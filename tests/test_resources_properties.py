@@ -1,0 +1,194 @@
+"""Property-based tests for the resource-server layer (hypothesis).
+
+Invariants the serving stack leans on, checked over randomized job/flow
+mixes rather than hand-picked examples:
+
+  - work conservation: the device run queue never idles (all slots free)
+    while a job waits, and total busy time equals the sum of service
+    durations for any submit pattern;
+  - SRPT anti-starvation: a deadline-carrying job is dispatched before
+    its deadline under an endless storm of shorter jobs, provided jobs
+    are short enough that a dispatch boundary falls inside the EDF
+    floor window;
+  - link topology monotonicity: adding a stage to a flow's path never
+    makes it finish earlier (the bottleneck governs);
+  - wait-telemetry consistency: recorded waits + service times tile the
+    makespan exactly on a capacity-1 FIFO queue.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import BandwidthIntegrator
+from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
+                                     single_link)
+
+# durations in [0.05, 2.0] s: realistic chunk scale, no degenerate zeros
+DUR = st.floats(0.05, 2.0)
+
+
+def _drain(rq: DeviceRunQueue, jobs):
+    """Submit (t_submit, duration) jobs in time order, run to empty.
+    Returns {key: (t_submit, t_start, duration)}."""
+    trace = {}
+    pending = sorted(enumerate(jobs), key=lambda kv: kv[1][0])
+    i = 0
+    while i < len(pending) or rq.load():
+        nc = rq.next_completion()
+        t_next_sub = pending[i][1][0] if i < len(pending) else float("inf")
+        if nc is not None and nc[0] <= t_next_sub:
+            t, key = nc
+            for k2, t0, dur in rq.complete(key, t):
+                trace[k2] = (trace[k2][0], t0, dur)
+            continue
+        assert i < len(pending), "idle queue with no arrivals left"
+        key, (t_sub, dur) = pending[i]
+        i += 1
+        trace[key] = (t_sub, None, dur)
+        t0 = rq.submit(key, dur, t_sub, flow=key % 3,
+                       weight=float(1 + key % 2))
+        if t0 is not None:
+            trace[key] = (t_sub, t0, dur)
+    return trace
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.lists(st.tuples(st.floats(0.0, 5.0), DUR), min_size=1,
+                max_size=12),
+       st.integers(1, 3), st.sampled_from(["fifo", "wfq", "srpt"]))
+def test_runqueue_work_conservation(jobs, capacity, discipline):
+    """For any job mix and discipline: every job runs exactly once after
+    its submit, total busy time is the sum of durations, and the server
+    is never fully idle while a job waits."""
+    rq = DeviceRunQueue(capacity, discipline)
+    trace = _drain(rq, jobs)
+    assert len(trace) == len(jobs)
+    assert np.isclose(rq.busy_s, sum(d for _, d in jobs))
+    ivals = []
+    for t_sub, t0, dur in trace.values():
+        assert t0 is not None and t0 >= t_sub - 1e-12
+        ivals.append((t0, t0 + dur))
+    # merged service union: any gap is genuine idleness, so no job may be
+    # waiting (submitted, not yet started) inside it — work conservation
+    ivals.sort()
+    merged = [list(ivals[0])]
+    for a, b in ivals[1:]:
+        if a <= merged[-1][1] + 1e-12:
+            merged[-1][1] = max(merged[-1][1], b)
+        else:
+            merged.append([a, b])
+    gaps = [(merged[k][1], merged[k + 1][0])
+            for k in range(len(merged) - 1)]
+    for g0, g1 in gaps:
+        for t_sub, t0, _ in trace.values():
+            overlap = min(t0, g1) - max(t_sub, g0)
+            assert overlap <= 1e-9, \
+                f"job waited [{t_sub},{t0}) across idle gap [{g0},{g1})"
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.lists(DUR, min_size=1, max_size=10), st.integers(1, 4))
+def test_runqueue_waits_tile_makespan(durs, capacity):
+    """Telemetry consistency: starts = submit + recorded wait; on a
+    capacity-1 FIFO queue with simultaneous arrivals the waits are the
+    duration prefix-sums and the makespan is their total."""
+    rq = DeviceRunQueue(1, "fifo")
+    starts = {}
+    for k, d in enumerate(durs):
+        starts[k] = rq.submit(k, d, 0.0)
+    t = 0.0
+    while rq.load():
+        t, key = rq.next_completion()
+        for k2, t0, _ in rq.complete(key, t):
+            starts[k2] = t0
+    prefix = np.concatenate([[0.0], np.cumsum(durs)[:-1]])
+    assert np.allclose(sorted(rq.waits), sorted(prefix))
+    assert np.allclose([starts[k] for k in range(len(durs))], prefix)
+    assert np.isclose(t, sum(durs))          # makespan == total service
+    assert np.isclose(rq.busy_s, sum(durs))
+    # multi-slot sanity: busy time can exceed makespan by at most xcap
+    rq2 = DeviceRunQueue(capacity, "fifo")
+    tr = _drain(rq2, [(0.0, d) for d in durs])
+    makespan = max(t0 + d for _, t0, d in tr.values())
+    assert rq2.busy_s <= capacity * makespan + 1e-9
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(st.floats(2.0, 8.0), st.floats(0.1, 0.4), st.integers(0, 1000))
+def test_srpt_deadline_floor_bounds_starvation(deadline, short_dur, seed):
+    """Pure SRPT would defer a 100-token-long flow forever behind an
+    endless storm of short jobs; with the EDF floor it must be
+    dispatched no later than its deadline (jobs are shorter than the
+    floor window, so a dispatch boundary always lands inside it)."""
+    rng = np.random.default_rng(seed)
+    rq = DeviceRunQueue(1, "srpt", deadline_floor_s=1.0)
+    rq.submit(("s", 0), short_dur, 0.0, flow="s0", remaining_s=short_dur)
+    rq.submit(("L", 0), 0.5, 0.0, flow="L", remaining_s=100.0,
+              deadline_s=deadline)
+    t, i = 0.0, 0
+    t_start = None
+    while t_start is None:
+        i += 1
+        d = float(rng.uniform(0.1, short_dur))
+        rq.submit(("s", i), d, t, flow=f"s{i}", remaining_s=d)
+        t, key = rq.next_completion()
+        for k2, t0, _ in rq.complete(key, t):
+            if k2 == ("L", 0):
+                t_start = t0
+        assert t <= deadline + 1.0, "long job starved past its deadline"
+    assert t_start <= deadline
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.integers(0, 10_000), st.floats(1e6, 100e6), st.floats(0.5, 1.0),
+       st.floats(1e5, 50e6))
+def test_topology_extra_stage_never_speeds_flow(seed, nbytes, jitter,
+                                                extra_rate):
+    """Bottleneck monotonicity: routing the same flow through an
+    additional stage can only delay (or preserve) its finish time —
+    whatever the extra stage's rate."""
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(jitter, 1.0, 4000) * 80e6
+    one = single_link(BandwidthIntegrator(base, 0.01))
+    one.add(0, nbytes)
+    t1, _ = one.next_completion()
+    two = LinkTopology({
+        "nic": LinkStage("nic", BandwidthIntegrator(
+            np.full(4000, extra_rate), 0.01)),
+        "uplink": LinkStage("uplink", BandwidthIntegrator(base, 0.01)),
+    })
+    two.add(0, nbytes, path=("nic", "uplink"))
+    t2, _ = two.next_completion()
+    assert t2 >= t1 * (1 - 1e-6)
+    # and a non-binding extra stage (much faster than the bottleneck)
+    # leaves the finish time unchanged
+    fat = LinkTopology({
+        "nic": LinkStage("nic", BandwidthIntegrator(
+            np.full(4000, 10e9), 0.01)),
+        "uplink": LinkStage("uplink", BandwidthIntegrator(base, 0.01)),
+    })
+    fat.add(0, nbytes, path=("nic", "uplink"))
+    t3, _ = fat.next_completion()
+    assert np.isclose(t3, t1, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(st.integers(1, 6), st.floats(10e6, 90e6))
+def test_topology_advance_conserves_total_bytes(n_flows, rate):
+    """Fluid conservation, stepped the way the cluster drives the server
+    (always to the earliest completion, so active sets are piecewise
+    constant): over each interval the flows together drain exactly the
+    stage's delivered bytes, and the completing flow's demand is spent."""
+    topo = single_link(BandwidthIntegrator(np.full(8000, rate), 0.01),
+                       link=None)
+    demands = {k: 1e6 * (k + 1) for k in range(n_flows)}
+    for k, nb in demands.items():
+        topo.add(k, nb)
+    t_prev, rem_prev = 0.0, dict(demands)
+    while topo.n_active():
+        t, key = topo.next_completion()
+        topo.advance(t)
+        drained = sum(rem_prev[k] - topo._rem[k] for k in topo._rem)
+        assert np.isclose(drained, rate * (t - t_prev), rtol=1e-5)
+        assert topo._rem[key] <= 1.0          # bytes: demand fully spent
+        topo.complete(key)
+        t_prev, rem_prev = t, dict(topo._rem)

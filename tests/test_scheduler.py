@@ -3,8 +3,9 @@ complete (hypothesis over random instances); the B&B oracle matches brute
 force on tiny instances; greedy is sandwiched between LP bound and naive
 baselines."""
 import numpy as np
-import pytest
-pytest.importorskip("hypothesis")   # optional dep: skip suite if absent
+import pytest  # noqa: F401
+# real hypothesis in CI; deterministic stub from tests/_vendor otherwise
+# (wired by conftest.py) — the suite never skips
 from hypothesis import given, settings, strategies as st
 
 from repro.core.chunks import Chunk, ChunkGrid, State
@@ -21,7 +22,7 @@ def _rand_instance(seed, n_t=3, n_l=4, n_h=1):
     return g, ts, tc
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=25, deadline=None, derandomize=True)
 @given(st.integers(0, 10_000), st.integers(1, 5), st.integers(1, 5),
        st.integers(1, 3))
 def test_greedy_schedule_legal_and_complete(seed, n_t, n_l, n_h):
@@ -32,7 +33,7 @@ def test_greedy_schedule_legal_and_complete(seed, n_t, n_l, n_h):
     assert sched.n_computed() + sched.n_streamed() == g.size
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=15, deadline=None, derandomize=True)
 @given(st.integers(0, 10_000))
 def test_positional_hybrid_legal(seed):
     g, ts, tc = _rand_instance(seed, n_t=4, n_l=3)
