@@ -54,31 +54,43 @@ def _scalar_rows(quick: bool, seeds: int):
 def _multi_device_rows(quick: bool):
     """Structural congestion: n devices, each loading one context through
     its NIC into the shared AP uplink; per-policy fleet TTFT + uplink
-    share. The single-device row is the uncongested baseline."""
+    share. The single-device row is the uncongested baseline. Each
+    congestion level also runs as the three-hop cloud tree (two APs
+    splitting the uplink crowd, one shared cloud-egress stage): the
+    second AP relieves the last-metre contention until the egress trunk
+    binds — the deeper-topology counterpart of the same study."""
     from repro.serving.cluster import RequestSpec, ServingCluster
     cfg = get_config("sparkv-qwen3-4b")
     spcfg = SparKVConfig(scheduler_mode="engine")
     ctx = 4096 if quick else 8192
     levels = [1, 2] if quick else [1, 2, 5]
+    variants = [("two-stage", dict())]
+    if not quick:
+        variants.append(("three-hop", dict(n_aps=2,
+                                           egress="cloud-egress")))
     rows = []
     for n_dev in levels:
-        row = {"n_devices": n_dev}
-        for pol in ("sparkv", "strong_hybrid", "cachegen"):
-            specs = [RequestSpec(arrival_s=0.0, context_len=ctx,
-                                 policy=pol, seed=i, device=i)
-                     for i in range(n_dev)]
-            rep = ServingCluster(cfg, spcfg, "jetson-orin", "campus-wifi",
-                                 max_concurrency=n_dev,
-                                 n_devices=n_dev, nic="device-nic"
-                                 ).run(specs)
-            s = rep.summary()
-            row[f"{pol}_ttft"] = s["ttft_mean_s"]
-            row[f"{pol}_share"] = s["uplink_share_p50"]
-        row["vs_hybrid_x"] = row["strong_hybrid_ttft"] / row["sparkv_ttft"]
-        row["vs_cachegen_x"] = row["cachegen_ttft"] / row["sparkv_ttft"]
-        rows.append(row)
+        for topo, kw in (variants if n_dev > 1 else variants[:1]):
+            row = {"n_devices": n_dev, "topology": topo}
+            for pol in ("sparkv", "strong_hybrid", "cachegen"):
+                specs = [RequestSpec(arrival_s=0.0, context_len=ctx,
+                                     policy=pol, seed=i, device=i)
+                         for i in range(n_dev)]
+                rep = ServingCluster(cfg, spcfg, "jetson-orin",
+                                     "campus-wifi",
+                                     max_concurrency=n_dev,
+                                     n_devices=n_dev, nic="device-nic",
+                                     **kw).run(specs)
+                s = rep.summary()
+                row[f"{pol}_ttft"] = s["ttft_mean_s"]
+                row[f"{pol}_share"] = s["uplink_share_p50"]
+            row["vs_hybrid_x"] = row["strong_hybrid_ttft"] \
+                / row["sparkv_ttft"]
+            row["vs_cachegen_x"] = row["cachegen_ttft"] \
+                / row["sparkv_ttft"]
+            rows.append(row)
     return rows, ("\n[Fig 13] TTFT under AP congestion "
-                  "(two-stage NIC -> uplink topology)")
+                  "(NIC -> uplink tree, and the three-hop cloud variant)")
 
 
 def run(quick: bool = False, seeds: int = 3, multi_device: bool = False):

@@ -16,8 +16,6 @@ Also checks the regressions the subsystem exists to express:
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs import SparKVConfig, get_config
 from repro.core.costs import RunQueueModel
 from repro.serving.cluster import ServingCluster

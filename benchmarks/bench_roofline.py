@@ -15,8 +15,7 @@ import glob
 import json
 import os
 
-from repro.distributed.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
-                                        roofline_terms)
+from repro.distributed.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
 
 from benchmarks.common import save, table
 

@@ -20,6 +20,7 @@ BENCHES = [
     ("fleet", "benchmarks.bench_fleet_traffic"),
     ("slo", "benchmarks.bench_slo_admission"),
     ("decode", "benchmarks.bench_decode_goodput"),
+    ("topology", "benchmarks.bench_topology_tree"),
     ("fig15", "benchmarks.bench_fig15_context_scaling"),
     ("fig16", "benchmarks.bench_fig16_breakdown"),
     ("quality", "benchmarks.bench_quality_validation"),

@@ -10,7 +10,6 @@ Run with several fake host devices to make the resharding real:
 import shutil
 
 import jax
-import numpy as np
 
 from repro.configs import TrainConfig, get_smoke
 from repro.checkpoint.manager import CheckpointManager

@@ -7,7 +7,6 @@ compute, holding TTFT roughly flat while static schedules degrade.
 
   PYTHONPATH=src python examples/serve_under_volatility.py
 """
-import numpy as np
 
 from repro.configs import SparKVConfig, get_config
 from repro.core import baselines as B

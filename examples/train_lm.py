@@ -8,10 +8,7 @@ import argparse
 import dataclasses
 import shutil
 
-import jax
-
 from repro.configs import TrainConfig, get_config
-from repro.configs.base import ModelConfig
 from repro.checkpoint.manager import CheckpointManager
 from repro.models import build_model
 from repro.training.trainer import FaultInjector, train_loop

@@ -152,6 +152,13 @@ NETWORKS: dict[str, NetworkProfile] = {
     # uplink does — the crossover the Fig. 13 congested-AP study probes
     "device-nic": NetworkProfile("device-nic", 600e6 / 8, 60e6 / 8,
                                  corr_tau_s=1.5),
+    # cloud-egress trunk for three-hop trees (NIC -> AP uplink ->
+    # egress): a wired hop shared by *all* APs — generously provisioned
+    # for a handful of flows, the fleet-wide bottleneck once enough APs
+    # pull concurrently (the bench_topology_tree starved-egress study
+    # dials the mean down further)
+    "cloud-egress": NetworkProfile("cloud-egress", 1.6e9 / 8, 200e6 / 8,
+                                   corr_tau_s=0.5),
     # datacenter-ish for the TPU profile
     "dcn-25g": NetworkProfile("dcn-25g", 25e9 / 8, 2e9 / 8, corr_tau_s=0.2),
 }

@@ -60,8 +60,8 @@ import numpy as np
 
 from repro.core.chunks import Chunk, ChunkGrid, State
 from repro.core.controller import RuntimeController
-from repro.core.costs import (DeviceProfile, EnergyMeter, GroundTruthLatency,
-                              NetworkProfile)
+from repro.core.costs import (DeviceProfile, EnergyMeter,
+                              GroundTruthLatency)
 from repro.core.scheduler import Schedule
 
 

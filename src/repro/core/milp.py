@@ -15,7 +15,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.chunks import Chunk, ChunkGrid
+from repro.core.chunks import ChunkGrid
 from repro.core.lp import solve_lp
 from repro.core.scheduler import Schedule, Stage
 

@@ -14,11 +14,21 @@ it from concurrently in-flight compute; a cluster with an explicit device
 run queue derives it from observed queue occupancy via
 :func:`queue_utilization` — the nvidia-smi-style "how busy is the device"
 signal that an explicit queue exposes directly.
+
+How the U feature turns into *delay* is learnable too: the serving
+cluster records every request's realized device queue wait
+(``compute_wait_s``) and per-stage link shares, feeds them back through
+:meth:`LatencyPredictor.observe`, and :meth:`LatencyPredictor.refresh`
+retrains the contention models online — a least-squares wait model on
+(occupancy, backlog) replacing the analytic occupancy-dilation term of
+``repro.serving.slo.predict_ttft``, and a link-efficiency estimate
+replacing the profiled fair-share fraction. Until the first refresh (or
+with no observations) both predictions return ``None`` and callers keep
+the analytic fallback, so refresh-off behaviour is bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -100,6 +110,12 @@ class LatencyPredictor:
         self.t_proj = profile.t_proj_s
         self.params = _init_mlp(jax.random.PRNGKey(seed))
         self.scaler: FeatureScaler | None = None
+        # online contention-refresh state (serving telemetry)
+        self.obs_window = 1024               # newest observations kept
+        self._wait_obs: list[tuple] = []     # (load, cap, backlog_s, wait_s)
+        self._share_obs: list[tuple] = []    # (n_flows, bottleneck share)
+        self._wait_coef: np.ndarray | None = None
+        self._eta_hat: float | None = None
 
     # ---- training data from profiling runs ----
     def profile_samples(self, n: int, rng: np.random.Generator,
@@ -179,3 +195,83 @@ class LatencyPredictor:
         out = ms * 1e-3 + self.t_dense
         out = np.where(layers == self.cfg.num_layers - 1, self.t_proj, out)
         return np.maximum(out, 1e-6)
+
+    # ---- online contention refresh (serving telemetry) ----
+    def observe(self, *, load: int, capacity: int, backlog_s: float,
+                wait_s: float, n_flows: int | None = None,
+                share: float | None = None) -> None:
+        """Record one served request's contention outcome: the device
+        occupancy / service backlog it was admitted against and the
+        queue wait it actually experienced (``EngineResult.
+        compute_wait_s``), plus — when it streamed — the flow count at
+        admission and the observed bottleneck link share
+        (min over ``LinkTopology.stage_shares``). Observations buffer
+        until :meth:`refresh`; only the newest ``obs_window`` are kept."""
+        self._wait_obs.append((float(load), float(max(capacity, 1)),
+                               float(backlog_s), float(max(wait_s, 0.0))))
+        del self._wait_obs[:-self.obs_window]
+        if n_flows is not None and share is not None:
+            self._share_obs.append((float(max(n_flows, 1)),
+                                    float(np.clip(share, 0.0, 1.0))))
+            del self._share_obs[:-self.obs_window]
+
+    @property
+    def refreshed(self) -> bool:
+        """True once refresh() has fit at least one contention model —
+        the gate ``repro.serving.slo.predict_ttft`` checks before
+        preferring the learned terms over the analytic fallback."""
+        return self._wait_coef is not None or self._eta_hat is not None
+
+    def refresh(self, *, min_samples: int = 8,
+                ridge: float = 1e-3) -> dict | None:
+        """Retrain the contention models on the buffered observations.
+
+        Wait model: ridge least-squares from (occupancy/capacity,
+        backlog/capacity) to realized queue wait — the learned
+        replacement for the analytic max(occupancy dilation, backlog
+        drain) of ``slo.predict_ttft``. Share model: the aggregate link
+        efficiency ``eta_hat`` solving share ~= eta/n over the observed
+        (flow count, bottleneck share) pairs. Either model stays None
+        (analytic fallback) below ``min_samples``; returns a fit report
+        or None when nothing was trainable."""
+        report: dict = {}
+        if len(self._wait_obs) >= min_samples:
+            obs = np.asarray(self._wait_obs)
+            x = self._wait_features(obs[:, 0], obs[:, 1], obs[:, 2])
+            y = obs[:, 3]
+            gram = x.T @ x + ridge * np.eye(x.shape[1])
+            self._wait_coef = np.linalg.solve(gram, x.T @ y)
+            pred = np.maximum(x @ self._wait_coef, 0.0)
+            report.update(n_wait_obs=len(self._wait_obs),
+                          wait_mae_s=float(np.abs(pred - y).mean()))
+        if len(self._share_obs) >= min_samples:
+            obs = np.asarray(self._share_obs)
+            self._eta_hat = float(np.clip((obs[:, 0] * obs[:, 1]).mean(),
+                                          0.05, 1.0))
+            report.update(n_share_obs=len(self._share_obs),
+                          eta_hat=self._eta_hat)
+        return report or None
+
+    @staticmethod
+    def _wait_features(load, capacity, backlog_s) -> np.ndarray:
+        load = np.atleast_1d(np.asarray(load, float))
+        cap = np.maximum(np.atleast_1d(np.asarray(capacity, float)), 1.0)
+        backlog = np.atleast_1d(np.asarray(backlog_s, float))
+        return np.stack([load / cap, backlog / cap,
+                         np.ones_like(load)], axis=1)
+
+    def predict_wait_s(self, load: int, capacity: int,
+                       backlog_s: float) -> float | None:
+        """Learned device queue wait for a request admitted against this
+        occupancy/backlog; None before the first successful refresh."""
+        if self._wait_coef is None:
+            return None
+        x = self._wait_features(load, capacity, backlog_s)
+        return max(float((x @ self._wait_coef)[0]), 0.0)
+
+    def predict_share(self, n_flows: int) -> float | None:
+        """Learned per-flow bottleneck link share with `n_flows` active;
+        None before a successful share refresh."""
+        if self._eta_hat is None:
+            return None
+        return min(self._eta_hat / max(n_flows, 1), 1.0)

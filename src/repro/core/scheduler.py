@@ -14,8 +14,6 @@ land at the stage boundary.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Callable, Optional
 
 import numpy as np
 

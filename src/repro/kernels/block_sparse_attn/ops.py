@@ -7,7 +7,6 @@ TPU). The pure-jnp oracle lives in ref.py.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

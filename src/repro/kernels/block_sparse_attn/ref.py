@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def block_mask_dense(block_idx: jax.Array, block_cnt: jax.Array,

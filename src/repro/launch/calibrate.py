@@ -28,7 +28,7 @@ import json
 import jax
 
 from repro.configs import SHAPES, get_config, shape_applicable
-from repro.distributed.roofline import parse_collectives, roofline_terms
+from repro.distributed.roofline import parse_collectives
 from repro.launch.dryrun import build_cell
 from repro.launch.mesh import make_production_mesh
 

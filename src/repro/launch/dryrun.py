@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ASSIGNED_ARCHS, SHAPES, TrainConfig, get_config,
                            shape_applicable)
@@ -27,7 +26,6 @@ from repro.distributed.roofline import parse_collectives, roofline_terms
 from repro.distributed.sharding import make_rules, use_rules
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
-from repro.models.layers import pspec_tree
 from repro.training.optimizer import AdamW
 
 

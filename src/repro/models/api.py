@@ -11,7 +11,7 @@ so the launcher, dry-run, trainer and serving engine are family-agnostic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import constrain
-from repro.models import layers as L
 from repro.models.layers import ParamDef
 
 

@@ -5,12 +5,8 @@ fast; each layer body is rematerialized per cfg.remat.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed.sharding import constrain
 from repro.models import layers as L

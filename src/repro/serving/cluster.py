@@ -12,7 +12,11 @@ clock:
     degenerate one-stage topology); with ``n_devices > 1`` and a ``nic``
     profile the topology is the paper's Fig. 13 shape — per-device NIC
     stages feeding one congested AP uplink, the bottleneck stage governing
-    each flow's rate.
+    each flow's rate. ``nic`` may be a per-device sequence (asymmetric
+    NIC fleets), and with ``n_aps > 1`` / an ``egress`` profile the tree
+    deepens to the full three-hop cloud path: NICs -> per-AP uplinks ->
+    one cloud-egress stage shared by *all* APs
+    (``resources.tree_topology``).
   - **device servers** — compute contention has two modes. Legacy
     closed-loop: in-flight compute dilates everyone's service time
     (``util = n_other_computing / capacity`` into
@@ -87,13 +91,13 @@ from repro.core.costs import (GroundTruthLatency, NetworkProfile, PROFILES,
                               NETWORKS, RunQueueModel, SharedLinkModel)
 from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
                                DecodeDone, DecodeStart, DecodeTick,
-                               HybridEngine, StartAck, StreamStart, Wait,
-                               decode_first_token_seconds)
-from repro.core.predictor import queue_utilization
+                               HybridEngine, StartAck, StreamStart, Wait)
+from repro.core.predictor import LatencyPredictor, queue_utilization
 from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
 from repro.serving.decode import DecodeBatcher, DecodeConfig
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
-                                     nic_uplink_topology, single_link)
+                                     single_link, tree_path, tree_topology,
+                                     uplink_stage_name)
 from repro.serving.slo import (SLOPolicy, decide_admission,
                                plan_compute_seconds)
 
@@ -178,6 +182,9 @@ class RequestRecord:
     ttlt_s: float = 0.0                     # last token - arrival
     tpot_s: float = 0.0                     # mean inter-token time
     tpot_slo_s: Optional[float] = None
+    # mean share received on every stage of the flow's path (NIC, AP
+    # uplink, cloud egress) — the per-stage breakdown behind uplink_share
+    stage_shares: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -211,6 +218,10 @@ class _ActiveRequest:
     comp_done_s: float = 0.0                # attained compute service
     downgraded: bool = False
     pred_ttft_s: Optional[float] = None
+    # admission-time contention snapshot (predictor refresh features)
+    obs_load: int = 0
+    obs_backlog_s: float = 0.0
+    obs_n_flows: int = 0
 
 
 @dataclasses.dataclass
@@ -337,15 +348,15 @@ def telemetry_policy(spec: RequestSpec, cluster: "ServingCluster",
     resource servers at admission time.
 
     The hybrid planner's advantage evaporates when its streaming path is
-    a fiction: if the projected per-flow uplink share (profiled mean
-    bandwidth x fair-share fraction with this flow added) falls below
+    a fiction: if the projected per-flow share across the shared stages
+    of this device's path (its AP uplink, and the cloud egress when the
+    topology has one — profiled stage mean x fair-share fraction with
+    this flow added, the bottleneck stage governing) falls below
     ``bw_floor_frac`` of the exclusive-link bandwidth *and* the device
     server still has slack for this request's compute, loading locally
     dominates. Otherwise run the sparkv planner, which keeps migrating
     at runtime anyway."""
-    n_flows = cluster.active_flows()
-    frac = cluster.link.per_flow_fraction(n_flows + 1) if cluster.link \
-        else 1.0 / (n_flows + 1)
+    frac = cluster.projected_flow_frac(spec.device)
     link_starved = frac < bw_floor_frac
     device_slack = cluster.device_load(spec.device) < cluster.capacity
     return "local_prefill" if link_starved and device_slack else "sparkv"
@@ -384,8 +395,35 @@ class ServingCluster:
     n_devices, nic, nic_link : with ``nic`` set (a ``NetworkProfile`` or
         name), each device gets its own NIC stage feeding the shared
         uplink (two-stage topology); requests route via
-        ``RequestSpec.device``. ``n_devices == 1`` with ``nic=None`` is
-        the single-stage PR 1 semantics, bit-for-bit.
+        ``RequestSpec.device``. ``nic`` may also be a sequence of
+        profiles/names, one per device — asymmetric NIC fleets; a
+        sequence of identical profiles is bit-for-bit the symmetric
+        path. ``n_devices == 1`` with ``nic=None`` is the single-stage
+        PR 1 semantics, bit-for-bit.
+    n_aps, ap_of_device : number of access points and the device -> AP
+        assignment (default round-robin ``d % n_aps``). Each AP owns its
+        own uplink stage (AP 0 keeps the cluster's main uplink trace;
+        further APs draw fresh traces from the same network profile), so
+        a multi-AP fleet splits uplink contention structurally.
+    egress, egress_link : a ``NetworkProfile`` (or name) arms the
+        third hop — one cloud-egress stage crossed by *every* flow,
+        whatever its AP. ``egress_link=None`` means ideal fair sharing
+        (a wired cloud trunk has no MAC contention overhead); pass a
+        ``SharedLinkModel`` to model per-flow egress overhead. An
+        unconstrained egress (mean far above per-flow demand) leaves
+        two-stage traces unchanged — the bottleneck min ignores it.
+    predictor, refresh_every : a ``repro.core.predictor.
+        LatencyPredictor`` arms the online contention refresh: every
+        finalized request feeds its admission-time occupancy/backlog
+        snapshot, realized queue wait and observed per-stage link
+        shares to ``predictor.observe``, and every ``refresh_every``
+        completions the cluster calls ``predictor.refresh()`` — after
+        which SLO admission (``slo.predict_ttft``/``predict_tpot``)
+        prefers the learned wait/share models over the analytic
+        occupancy-dilation term. ``refresh_every=0`` never refreshes
+        (observations still accumulate for an explicit ``refresh()``
+        between runs); ``predictor=None`` is bit-identical to the
+        analytic path.
     slo : an ``repro.serving.slo.SLOPolicy`` arms deadline-aware
         admission for requests that carry ``RequestSpec.deadline_s``:
         predicted-violation requests are downgraded to coarser stream
@@ -414,9 +452,14 @@ class ServingCluster:
                  run_queue: Optional[RunQueueModel] = None,
                  n_devices: int = 1, nic=None,
                  nic_link: Optional[SharedLinkModel] = None,
+                 n_aps: int = 1, ap_of_device=None,
+                 egress=None,
+                 egress_link: Optional[SharedLinkModel] = None,
                  slo: Optional["SLOPolicy"] = None,
                  policy_fn: Optional[Callable] = None,
                  decode: Optional[DecodeConfig] = None,
+                 predictor: Optional[LatencyPredictor] = None,
+                 refresh_every: int = 0,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
                  bw_seed: int = 991, seed: int = 0):
         self.cfg = cfg
@@ -432,12 +475,34 @@ class ServingCluster:
         self.link = link if link is not None else SharedLinkModel(self.net)
         self.run_queue = run_queue
         self.n_devices = n_devices
-        self.nic: Optional[NetworkProfile] = (
-            NETWORKS[nic] if isinstance(nic, str) else nic)
+        if nic is None or isinstance(nic, (str, NetworkProfile)):
+            self.nic: Optional[NetworkProfile] = (
+                NETWORKS[nic] if isinstance(nic, str) else nic)
+            self._nic_profiles = (None if self.nic is None
+                                  else [self.nic] * n_devices)
+        else:                                # per-device (asymmetric) NICs
+            self._nic_profiles = [NETWORKS[p] if isinstance(p, str) else p
+                                  for p in nic]
+            assert len(self._nic_profiles) == n_devices, \
+                "one NIC profile per device"
+            self.nic = self._nic_profiles[0]
         self.nic_link = nic_link
+        assert n_aps >= 1, n_aps
+        self.n_aps = n_aps
+        self.ap_of_device = tuple(ap_of_device) if ap_of_device is not None \
+            else tuple(d % n_aps for d in range(n_devices))
+        assert len(self.ap_of_device) == n_devices, \
+            "one AP assignment per device"
+        assert all(0 <= a < n_aps for a in self.ap_of_device), \
+            f"AP assignment out of range [0, {n_aps})"
+        self.egress: Optional[NetworkProfile] = (
+            NETWORKS[egress] if isinstance(egress, str) else egress)
+        self.egress_link = egress_link
         self.slo = slo
         self.policy_fn = policy_fn
         self.decode_cfg = decode
+        self.predictor = predictor
+        self.refresh_every = refresh_every
         self.bw_trace = bw_trace
         self.bw_dt = bw_dt
         self.bw_seed = bw_seed
@@ -448,6 +513,7 @@ class ServingCluster:
         self._run_queues: dict[int, DeviceRunQueue] = {}
         self._computing: dict[int, set] = {}
         self._batchers: dict[int, DecodeBatcher] = {}
+        self._n_finalized = 0                # predictor refresh cadence
 
     # ---- telemetry surface (valid during run()) ----
     @property
@@ -481,6 +547,64 @@ class ServingCluster:
         bat = self._batchers.get(device)
         return bat.occupancy() if bat else 0
 
+    def _shared_stages(self, device: int) -> tuple:
+        """(stage name, profiled mean bw, link model) for every *shared*
+        stage of `device`'s path — its AP uplink, plus the cloud egress
+        when the topology has one. Per-device NIC stages are excluded:
+        they are exclusive, so their projection is the profile mean."""
+        ap = self.ap_of_device[device] if device < len(self.ap_of_device) \
+            else 0
+        out = ((uplink_stage_name(ap, self.n_aps), self.net.mean_bw,
+                self.link),)
+        if self.egress is not None:
+            out += (("egress", self.egress.mean_bw, self.egress_link),)
+        return out
+
+    def projected_flow_frac(self, device: int = 0) -> float:
+        """Fraction of the exclusive profiled uplink bandwidth a new
+        flow admitted on `device` should expect: for each shared stage
+        of its path, stage mean x the fair share with this flow added,
+        normalized by the uplink profile mean — the bottleneck stage
+        governs. On single-uplink topologies this is exactly
+        ``link.per_flow_fraction(n_active + 1)``. Telemetry for
+        :func:`telemetry_policy` and ``slo.predict_ttft``."""
+        best = 1.0
+        for name, mean_bw, lm in self._shared_stages(device):
+            st = self._link_server.stages.get(name) \
+                if self._link_server is not None else None
+            n = (len(st.active) if st is not None else 0) + 1
+            frac = lm.per_flow_fraction(n) if lm else 1.0 / n
+            best = min(best, frac * mean_bw / self.net.mean_bw)
+        return best
+
+    def nic_mean_bw(self, device: int = 0) -> Optional[float]:
+        """Profiled mean bandwidth of `device`'s own NIC stage (None
+        without NIC stages) — the exclusive-stage cap on its projected
+        stream rate."""
+        if self._nic_profiles is None:
+            return None
+        return self._nic_profiles[device].mean_bw
+
+    def observed_bottleneck_share(self, rid) -> Optional[float]:
+        """Realized bottleneck fraction of the exclusive uplink
+        bandwidth a finished flow received: min over the shared stages
+        of its path of (mean stage share x stage mean / uplink mean).
+        None when the flow never streamed. The predictor refresh's
+        share observation."""
+        if self._link_server is None:
+            return None
+        shares = self._link_server.stage_shares(rid)
+        out = None
+        for name, share in shares.items():
+            if name.startswith("nic"):
+                continue
+            mean_bw = self.egress.mean_bw \
+                if name == "egress" and self.egress is not None \
+                else self.net.mean_bw
+            v = share * mean_bw / self.net.mean_bw
+            out = v if out is None else min(out, v)
+        return out
+
     # ---- contention signals ----
     def _coupled_util(self, device: int) -> float:
         """Legacy dilation signal fed to attn_seconds while computing."""
@@ -502,22 +626,42 @@ class ServingCluster:
     # ---- topology construction ----
     def _build_link_server(self, integrator: BandwidthIntegrator
                            ) -> LinkTopology:
-        if self.nic is None:
+        """Materialize the link tree: AP 0's uplink is the cluster's
+        main trace (`integrator`), further APs draw fresh traces from
+        the same network profile, each device's NIC stage draws from
+        its own profile, and the egress stage (when armed) from the
+        egress profile — all on deterministic per-stage seeds, so the
+        single-AP egress-free tree is bit-for-bit the two-stage (or,
+        without NICs, single-stage) topology of earlier PRs."""
+        if self._nic_profiles is None and self.n_aps == 1 \
+                and self.egress is None:
             return single_link(integrator, self.link)
         horizon_s = (len(integrator.cum) - 1) * integrator.dt
-        nics = []
-        for d in range(self.n_devices):
-            rng = np.random.default_rng(self.bw_seed + 7919 * (d + 1))
-            trace = self.nic.trace(rng, horizon_s, self.bw_dt)
-            nics.append(BandwidthIntegrator(trace, self.bw_dt))
-        return nic_uplink_topology(nics, integrator,
-                                   uplink_link=self.link,
-                                   nic_link=self.nic_link)
+
+        def draw(profile: NetworkProfile, seed: int) -> BandwidthIntegrator:
+            rng = np.random.default_rng(seed)
+            return BandwidthIntegrator(profile.trace(rng, horizon_s,
+                                                     self.bw_dt),
+                                       self.bw_dt)
+
+        nics = None
+        if self._nic_profiles is not None:
+            nics = [draw(p, self.bw_seed + 7919 * (d + 1))
+                    for d, p in enumerate(self._nic_profiles)]
+        uplinks = [integrator] + [draw(self.net,
+                                       self.bw_seed + 60013 * a)
+                                  for a in range(1, self.n_aps)]
+        egress = None if self.egress is None \
+            else draw(self.egress, self.bw_seed + 15485863)
+        return tree_topology(nics, uplinks, self.ap_of_device, egress,
+                             uplink_link=self.link,
+                             nic_link=self.nic_link,
+                             egress_link=self.egress_link)
 
     def _flow_path(self, device: int) -> tuple:
-        if self.nic is None:
-            return ("uplink",)
-        return (f"nic{device}", "uplink")
+        return tree_path(device, self.ap_of_device[device], self.n_aps,
+                         has_nic=self._nic_profiles is not None,
+                         has_egress=self.egress is not None)
 
     # ---- main loop ----
     def run(self, specs: list[RequestSpec]) -> FleetReport:
@@ -542,6 +686,7 @@ class ServingCluster:
         integrator = BandwidthIntegrator(trace, self.bw_dt)
         link_server = self._build_link_server(integrator)
         self._link_server = link_server
+        self._n_finalized = 0
         self._computing = {d: set() for d in range(self.n_devices)}
         self._run_queues = {
             d: DeviceRunQueue(
@@ -738,7 +883,11 @@ class ServingCluster:
                                 deadline_abs=deadline_abs,
                                 comp_total_s=comp_total,
                                 downgraded=downgraded,
-                                pred_ttft_s=pred_ttft)
+                                pred_ttft_s=pred_ttft,
+                                obs_load=self.device_load(spec.device),
+                                obs_backlog_s=self.device_backlog_s(
+                                    spec.device),
+                                obs_n_flows=self.active_flows())
             active[rid] = st
             res = drive(st, prime=True)
             if res is not None:
@@ -781,7 +930,20 @@ class ServingCluster:
                 quant_bits=st.plan.quality_bits,
                 downgraded=st.downgraded,
                 n_tokens_out=res.n_tokens_out, ttlt_s=ttlt,
-                tpot_s=res.tpot_s, tpot_slo_s=st.spec.tpot_slo_s))
+                tpot_s=res.tpot_s, tpot_slo_s=st.spec.tpot_slo_s,
+                stage_shares=link_server.stage_shares(st.rid)))
+            if self.predictor is not None:
+                share = self.observed_bottleneck_share(st.rid)
+                self.predictor.observe(
+                    load=st.obs_load, capacity=self.capacity,
+                    backlog_s=st.obs_backlog_s,
+                    wait_s=res.compute_wait_s,
+                    n_flows=None if share is None else st.obs_n_flows + 1,
+                    share=share)
+                self._n_finalized += 1
+                if self.refresh_every \
+                        and self._n_finalized % self.refresh_every == 0:
+                    self.predictor.refresh()
             # decode-off: res.ttlt_s == res.ttft_s, so the makespan is
             # unchanged from first-token accounting
             makespan = max(makespan, res.ttlt_s)

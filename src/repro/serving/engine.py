@@ -31,11 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compression import huffman
-from repro.compression.quantize import dequantize, quantize
+from repro.compression.quantize import quantize
 from repro.configs.base import SparKVConfig
 from repro.core import baselines as B
-from repro.core.chunks import Chunk, ChunkGrid
-from repro.core.costs import NETWORKS, PROFILES
+from repro.core.chunks import Chunk
+from repro.core.costs import NETWORKS
 from repro.data.workloads import WorkloadChunks
 from repro.kernels.kv_dequant.ops import dequantize_chunk
 from repro.models.api import Model

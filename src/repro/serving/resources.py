@@ -15,8 +15,10 @@ Two families:
   trace fair-shared under a ``repro.core.costs.SharedLinkModel``).  A
   flow's instantaneous rate is the minimum of its per-stage shares, so a
   per-device NIC feeding a congested AP uplink (the paper's Fig. 13
-  scenario) is two stages on the flow's path.  A single-stage topology is
-  exactly PR 1's ``SharedLinkArbiter`` (which is now a subclass).
+  scenario) is two stages on the flow's path, and the cloud-egress tree
+  (:func:`tree_topology`: NICs -> per-AP uplinks -> one egress stage
+  shared by *all* APs) is three.  A single-stage topology is exactly
+  PR 1's ``SharedLinkArbiter`` (which is now a subclass).
 
 - :class:`DeviceRunQueue` — a *slotted* server: compute jobs occupy one
   of ``capacity`` service slots for a fixed duration; excess jobs wait in
@@ -98,6 +100,7 @@ class LinkTopology:
         # share telemetry (never cleared on complete): key -> sums
         self._share_time: dict = {}
         self._active_time: dict = {}
+        self._stage_share_time: dict = {}    # key -> {stage: share * dt sum}
 
     # ---- membership ----
     def n_active(self) -> int:
@@ -160,6 +163,10 @@ class LinkTopology:
             self._share_time[key] = self._share_time.get(key, 0.0) \
                 + last.fraction() * span
             self._active_time[key] = self._active_time.get(key, 0.0) + span
+            per_stage = self._stage_share_time.setdefault(key, {})
+            for s in self._path[key]:
+                per_stage[s] = per_stage.get(s, 0.0) \
+                    + self.stages[s].fraction() * span
         self.t = t
 
     # ---- completion search ----
@@ -215,6 +222,17 @@ class LinkTopology:
             return 1.0
         return self._share_time[key] / at
 
+    def stage_shares(self, key) -> dict[str, float]:
+        """Time-averaged fraction the flow received on *every* stage of
+        its path while active, keyed by stage name ({} if it never ran a
+        shared interval). The minimum entry is the flow's observed
+        bottleneck share — the signal the predictor refresh trains on."""
+        at = self._active_time.get(key, 0.0)
+        if at <= 0:
+            return {}
+        return {s: v / at
+                for s, v in self._stage_share_time.get(key, {}).items()}
+
 
 def single_link(integrator: BandwidthIntegrator,
                 link: Optional[SharedLinkModel] = None,
@@ -230,11 +248,70 @@ def nic_uplink_topology(nic_integrators: Sequence[BandwidthIntegrator],
                         nic_link: Optional[SharedLinkModel] = None
                         ) -> LinkTopology:
     """Two-stage tree: per-device NIC stages feeding one shared AP
-    uplink. Device d's flows take path ("nic{d}", "uplink")."""
-    stages = {f"nic{d}": LinkStage(f"nic{d}", bw, nic_link)
-              for d, bw in enumerate(nic_integrators)}
-    stages["uplink"] = LinkStage("uplink", uplink_integrator, uplink_link)
-    return LinkTopology(stages, default_path=("uplink",))
+    uplink. Device d's flows take path ("nic{d}", "uplink"). The
+    degenerate (egress-free, single-AP) case of :func:`tree_topology`."""
+    return tree_topology(nic_integrators, [uplink_integrator],
+                         [0] * len(nic_integrators),
+                         uplink_link=uplink_link, nic_link=nic_link)
+
+
+def tree_topology(nic_integrators: Optional[
+                      Sequence[BandwidthIntegrator]],
+                  uplink_integrators: Sequence[BandwidthIntegrator],
+                  ap_of_device: Sequence[int],
+                  egress_integrator: Optional[BandwidthIntegrator] = None,
+                  *, uplink_link: Optional[SharedLinkModel] = None,
+                  nic_link: Optional[SharedLinkModel] = None,
+                  egress_link: Optional[SharedLinkModel] = None
+                  ) -> LinkTopology:
+    """Full cloud-egress tree: per-device NIC stages feeding per-AP
+    uplink stages feeding one cloud-egress stage shared by *all* APs.
+
+    ``ap_of_device[d]`` assigns device ``d`` to its access point. Stage
+    names follow :func:`tree_path`: ``nic{d}`` (one per device, omitted
+    when ``nic_integrators`` is None), ``uplink`` with a single AP /
+    ``uplink{a}`` with several (so the single-AP tree keeps the exact
+    two-stage stage names and trace), and ``egress`` when an egress
+    integrator is given. A tree with one AP and no egress is therefore
+    *identical* to :func:`nic_uplink_topology`; an unconstrained egress
+    stage (capacity far above every per-flow share) leaves the two-stage
+    trace bit-for-bit unchanged, since the bottleneck min ignores it.
+    """
+    n_aps = len(uplink_integrators)
+    assert n_aps >= 1, "tree needs at least one AP uplink"
+    assert all(0 <= a < n_aps for a in ap_of_device), \
+        f"ap_of_device entries out of range [0, {n_aps})"
+    stages: dict[str, LinkStage] = {}
+    if nic_integrators is not None:
+        assert len(nic_integrators) == len(ap_of_device), \
+            "one NIC integrator per device"
+        for d, bw in enumerate(nic_integrators):
+            stages[f"nic{d}"] = LinkStage(f"nic{d}", bw, nic_link)
+    for a, bw in enumerate(uplink_integrators):
+        name = uplink_stage_name(a, n_aps)
+        stages[name] = LinkStage(name, bw, uplink_link)
+    if egress_integrator is not None:
+        stages["egress"] = LinkStage("egress", egress_integrator,
+                                     egress_link)
+    return LinkTopology(stages,
+                        default_path=(uplink_stage_name(0, n_aps),))
+
+
+def uplink_stage_name(ap: int, n_aps: int) -> str:
+    """Stage name of AP `ap`'s uplink ("uplink" when there is only one,
+    so single-AP trees keep the two-stage naming)."""
+    return "uplink" if n_aps == 1 else f"uplink{ap}"
+
+
+def tree_path(device: int, ap: int, n_aps: int, *, has_nic: bool,
+              has_egress: bool) -> tuple:
+    """Path of stage names a flow from `device` (attached to AP `ap`)
+    takes through a :func:`tree_topology`."""
+    path = (f"nic{device}",) if has_nic else ()
+    path += (uplink_stage_name(ap, n_aps),)
+    if has_egress:
+        path += ("egress",)
+    return path
 
 
 # ---------------------------------------------------------------------------

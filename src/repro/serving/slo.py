@@ -6,8 +6,11 @@ mechanisms the cluster composes on top of the resource servers:
 
   - **TTFT prediction** — :func:`predict_ttft` projects a request's TTFT
     from its plan (per-chunk predicted stream/compute costs) and the live
-    resource servers: the fair-share uplink fraction with this flow
-    added, and the device run queue's service backlog.
+    resource servers: the bottleneck fair share across the shared stages
+    of the device's path (AP uplink, cloud egress) with this flow added,
+    and the device run queue's service backlog. With a refreshed online
+    predictor on the cluster, the learned wait/share models replace the
+    analytic contention terms.
   - **Quality shedding** — :func:`decide_admission` compares the
     prediction against the deadline. A predicted violation first walks
     the request's KV stream down the quantization bitrate ladder
@@ -111,10 +114,11 @@ def predict_ttft(plan, cluster, spec, now: float, *,
 
       - stream path: planned stream bytes (scaled to `bits` when
         downgrading) over the projected per-flow bandwidth — the
-        profiled uplink mean times the fair share this flow would get
-        with ``n_active + 1`` flows, capped by the per-device NIC mean
-        in two-stage topologies (the bottleneck stage governs) — plus
-        the on-device decode/dequant tails;
+        bottleneck across the shared stages of the device's path
+        (``cluster.projected_flow_frac``: its AP uplink fair share with
+        this flow added, and the cloud-egress share on three-hop trees),
+        capped by the device's own NIC mean (the exclusive stage) —
+        plus the on-device decode/dequant tails;
       - compute path: planned per-chunk compute predictions, with the
         contention wait modeled as the max of two regimes — occupancy
         dilation (the engine keeps one chunk outstanding per request, so
@@ -127,6 +131,15 @@ def predict_ttft(plan, cluster, spec, now: float, *,
         max-combined, never summed;
       - plus elapsed admission-queue wait and the first-token decode.
 
+    Both contention terms are **analytic fallbacks**: when the cluster
+    carries a refreshed ``repro.core.predictor.LatencyPredictor``
+    (``ServingCluster(predictor=..., refresh_every=...)``), the learned
+    models replace them — ``predict_share`` (observed bottleneck link
+    efficiency) supplants the profiled fair-share fraction and
+    ``predict_wait_s`` (least-squares on realized queue waits) supplants
+    the occupancy-dilation/backlog max. An unrefreshed or absent
+    predictor leaves this function bit-identical to the analytic form.
+
     The two paths overlap in the engine, so the context time is their
     max — the same fluid approximation the offline planner uses. The
     plan's per-chunk predictions already carry the admission-time U
@@ -134,15 +147,20 @@ def predict_ttft(plan, cluster, spec, now: float, *,
     deadline-class requests should actually meet their deadlines.
     """
     factor = 1.0 if bits is None else bits / plan.quality_bits
+    pred = getattr(cluster, "predictor", None)
+    if pred is not None and not getattr(pred, "refreshed", False):
+        pred = None
     n_flows = cluster.active_flows()
-    frac = cluster.link.per_flow_fraction(n_flows + 1) if cluster.link \
-        else 1.0 / (n_flows + 1)
+    share = pred.predict_share(n_flows + 1) if pred is not None else None
+    frac = share if share is not None \
+        else cluster.projected_flow_frac(spec.device)
     bw_eff = cluster.net.mean_bw * frac
-    if cluster.nic is not None:
-        # two-stage topology: the flow drains at the slower of its NIC
-        # and its uplink share — ignoring the NIC would over-admit
-        # exactly when the NIC is the bottleneck
-        bw_eff = min(bw_eff, cluster.nic.mean_bw)
+    nic_bw = cluster.nic_mean_bw(spec.device)
+    if nic_bw is not None:
+        # NIC-staged topology: the flow drains at the slower of its NIC
+        # and its shared-stage bottleneck — ignoring the NIC would
+        # over-admit exactly when the NIC is the bottleneck
+        bw_eff = min(bw_eff, nic_bw)
     t_stream = 0.0
     for stage in plan.schedule.stages:
         for c in stage.stream:
@@ -152,12 +170,19 @@ def predict_ttft(plan, cluster, spec, now: float, *,
             t_stream += chunk_stream_seconds(
                 plan.bytes_map[c] * factor, bw_eff, cluster.profile)
     t_comp = plan_compute_seconds(plan)
-    dilation = 1.0 + cluster.device_load(spec.device) \
-        / max(cluster.capacity, 1)
-    t_comp = max(t_comp * dilation,
-                 t_comp + backlog_delay_s(
-                     cluster.device_backlog_s(spec.device),
-                     cluster.capacity))
+    wait = pred.predict_wait_s(cluster.device_load(spec.device),
+                               cluster.capacity,
+                               cluster.device_backlog_s(spec.device)) \
+        if pred is not None else None
+    if wait is not None:
+        t_comp = t_comp + wait
+    else:
+        dilation = 1.0 + cluster.device_load(spec.device) \
+            / max(cluster.capacity, 1)
+        t_comp = max(t_comp * dilation,
+                     t_comp + backlog_delay_s(
+                         cluster.device_backlog_s(spec.device),
+                         cluster.capacity))
     t_first = decode_first_token_seconds(cluster.cfg, plan.context_len,
                                          cluster.profile)
     return (now - spec.arrival_s) + max(t_stream, t_comp) + t_first

@@ -14,9 +14,11 @@ Request mixes draw context lengths per dataset profile (rounded to whole
 chunks) and policies from a weighted table, so one trace can interleave
 sparkv / strong_hybrid / local_prefill requests the way a real fleet
 mixes device capabilities. For the resource-server cluster, traces can
-also spread requests over ``n_devices`` (round-robin — the two-stage
-NIC/uplink topology routes per device) and draw per-request WFQ weights
-from ``weight_mix`` (interactive vs. background service classes).
+also spread requests over ``n_devices`` (round-robin, or weighted via
+``device_mix`` for asymmetric-NIC fleets — the NIC/uplink/egress link
+tree routes per device, and the cluster's ``ap_of_device`` assigns each
+device to its access point) and draw per-request WFQ weights from
+``weight_mix`` (interactive vs. background service classes).
 
 SLO classes: ``slo_mix`` draws a named service class per request, each
 carrying a TTFT deadline (or ``None`` for best-effort) — e.g. a 70/30
@@ -59,6 +61,10 @@ class TrafficProfile:
     chunk_tokens: int = 1024
     # resource-server routing
     n_devices: int = 1                  # round-robin device assignment
+    # (device, draw weight) — overrides round-robin when non-empty, so
+    # asymmetric-NIC fleets can skew load toward fast-NIC devices (the
+    # cluster's ap_of_device then maps each device to its access point)
+    device_mix: tuple = ()
     weight_mix: tuple = ((1.0, 1.0),)   # (wfq weight, draw weight)
     # SLO classes: (class name, ttft deadline_s | None, draw weight) or
     # (class name, ttft deadline_s | None, tpot_slo_s | None, draw weight)
@@ -117,6 +123,13 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
     if profile.out_len_mix:
         out_p = np.array([w for _, w in profile.out_len_mix], float)
         out_p /= out_p.sum()
+    devices = [int(d) for d, _ in profile.device_mix]
+    dev_p = None
+    if profile.device_mix:
+        assert all(0 <= d < max(profile.n_devices, 1) for d in devices), \
+            f"device_mix entries out of range [0, {profile.n_devices})"
+        dev_p = np.array([w for _, w in profile.device_mix], float)
+        dev_p /= dev_p.sum()
     specs = []
     for i, t in enumerate(arrivals):
         ds_name = _weighted(profile.context_mix, rng)
@@ -137,10 +150,12 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
         max_new = 0
         if out_p is not None:
             max_new = out_lens[rng.choice(len(out_lens), p=out_p)]
+        dev = i % max(profile.n_devices, 1) if dev_p is None \
+            else devices[rng.choice(len(devices), p=dev_p)]
         specs.append(RequestSpec(
             arrival_s=float(t), context_len=ctx, dataset=ds_name,
             policy=_weighted(profile.policy_mix, rng), seed=seed + i,
-            device=i % max(profile.n_devices, 1), weight=wfq_w,
+            device=dev, weight=wfq_w,
             deadline_s=deadline, slo_class=slo_class,
             max_new_tokens=max_new, tpot_slo_s=tpot_slo))
     return specs

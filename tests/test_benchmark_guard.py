@@ -1,13 +1,49 @@
-"""Benchmark quick-run output guard: ``--quick`` smoke runs must never
-overwrite checked-in full-run results (they use reduced workloads, so
-their numbers are not comparable — see benchmarks/common.py)."""
+"""Benchmark results guard: ``--quick`` smoke runs must never overwrite
+checked-in full-run results (they use reduced workloads, so their
+numbers are not comparable — see benchmarks/common.py), and every
+checked-in ``results/benchmarks/*.json`` must validate against the
+benchmark registry (produced by a registered module, full-run, carrying
+the required metadata keys). Runs as its own CI job."""
 import ast
+import glob
+import json
 import os
-import re
+
+import pytest
 
 import benchmarks.common as common
+from benchmarks.run import BENCHES
 
 BENCH_DIR = os.path.dirname(common.__file__)
+RESULTS = sorted(glob.glob(os.path.join(os.path.normpath(common.RESULTS_DIR),
+                                        "*.json")))
+
+
+def _registered_save_names() -> set:
+    """String literals reachable as the first argument of ``save(...)``
+    in every module registered in benchmarks/run.py. Computed-name saves
+    (e.g. ``save("fig13_interference" + suffix)``) contribute their
+    constant parts, so a checked-in name must *start with* one of
+    these."""
+    names = set()
+    for _, module in BENCHES:
+        path = os.path.join(BENCH_DIR, module.split(".")[-1] + ".py")
+        with open(path) as f:
+            tree = ast.parse(f.read())
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else \
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            if name != "save" or not node.args:
+                continue
+            for sub in ast.walk(node.args[0]):
+                if isinstance(sub, ast.Constant) and \
+                        isinstance(sub.value, str):
+                    names.add(sub.value)
+                    break           # leftmost constant = the base name
+    return names
 
 
 def test_quick_save_routes_to_quick_dir(tmp_path, monkeypatch):
@@ -58,3 +94,49 @@ def test_every_bench_threads_quick_through_save():
                 offenders.append(f"{fname}:{node.lineno}")
     assert not offenders, \
         f"save() calls missing quick= passthrough: {offenders}"
+
+
+# ---------------------------------------------------------------------------
+# checked-in results validate against the registry
+# ---------------------------------------------------------------------------
+
+def test_some_results_are_checked_in():
+    assert RESULTS, "results/benchmarks/ has no checked-in JSONs"
+
+
+@pytest.mark.parametrize("path", RESULTS,
+                         ids=[os.path.basename(p) for p in RESULTS])
+def test_checked_in_result_validates_against_registry(path):
+    """Every checked-in result JSON was produced by a module registered
+    in benchmarks/run.py (its ``_bench`` name extends a registered
+    ``save()`` literal), is a *full* run (quick artifacts live under the
+    git-ignored quick/ dir and must never be committed), and carries
+    the metadata keys ``save()`` stamps plus printable rows."""
+    with open(path) as f:
+        payload = json.load(f)
+    fname = os.path.splitext(os.path.basename(path))[0]
+    for key in ("_bench", "_time"):
+        assert key in payload, f"{fname}: missing {key}"
+    assert payload["_bench"] == fname, \
+        f"{fname}: _bench stamp {payload['_bench']!r} != file name"
+    assert not payload.get("_quick", False), \
+        f"{fname}: quick-run artifact checked in"
+    names = _registered_save_names()
+    assert any(fname == n or fname.startswith(n) for n in names), \
+        f"{fname}: not produced by any bench registered in run.py " \
+        f"(known save names: {sorted(names)})"
+    rows = payload.get("rows")
+    if rows is None:                 # multi-table benches nest their rows
+        rows = [r for v in payload.values() if isinstance(v, list)
+                for r in v]
+    assert rows and all(isinstance(r, dict) for r in rows), \
+        f"{fname}: no row dicts found"
+
+
+def test_no_quick_artifacts_under_version_control():
+    """The quick/ subdirectory is git-ignored wholesale; nothing below
+    it may carry a full-run stamp either (belt and braces: a file moved
+    out of quick/ into the checked-in dir keeps its _quick flag)."""
+    for path in RESULTS:
+        with open(path) as f:
+            assert not json.load(f).get("_quick", False), path

@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs import SparKVConfig, get_config
 from repro.core import baselines as B
-from repro.core.costs import NETWORKS, RunQueueModel, SharedLinkModel
+from repro.core.costs import (NETWORKS, NetworkProfile,
+                              RunQueueModel, SharedLinkModel)
 from repro.core.engine import BandwidthIntegrator, LinkStarvedError
 from repro.data.workloads import DATASETS, synthesize
 from repro.serving.cluster import (FleetReport, RequestSpec,
@@ -373,6 +374,87 @@ def test_slo_met_flag_consistent():
         assert r.deadline_s == 20.0
     assert rep.summary()["slo_attainment"] == \
         sum(r.slo_met for r in rep.records) / len(rep.records)
+
+
+# ---------------------------------------------------------------------------
+# three-hop cloud-egress tree + asymmetric NICs
+# ---------------------------------------------------------------------------
+
+FAT_EGRESS = NetworkProfile("egress-fat", 1e15, 0.0)   # never binds
+
+
+def _tree_specs(n):
+    return [RequestSpec(arrival_s=0.2 * i, context_len=CTX,
+                        policy="cachegen", seed=i, device=i % 3)
+            for i in range(n)]
+
+
+def test_three_hop_unconstrained_egress_bit_identical():
+    """Cluster-level degenerate parity: a three-hop tree whose egress
+    can never bind reproduces the two-stage fleet bit-for-bit."""
+    specs = _tree_specs(4)
+    base = make_cluster(n_devices=3, nic="device-nic").run(specs)
+    tree = make_cluster(n_devices=3, nic="device-nic",
+                        egress=FAT_EGRESS).run(specs)
+    assert [r.ttft_s for r in base.records] \
+        == [r.ttft_s for r in tree.records]
+    assert [r.energy_j for r in base.records] \
+        == [r.energy_j for r in tree.records]
+    # the egress share telemetry exists on the tree run only
+    assert all("egress" in r.stage_shares for r in tree.records
+               if r.n_streamed)
+    assert all("egress" not in r.stage_shares for r in base.records)
+
+
+def test_asymmetric_identical_nic_profiles_bit_identical():
+    """`nic=[p, p, p]` is the symmetric `nic=p` path bit-for-bit."""
+    specs = _tree_specs(4)
+    sym = make_cluster(n_devices=3, nic="device-nic").run(specs)
+    asym = make_cluster(n_devices=3, nic=["device-nic"] * 3).run(specs)
+    assert sym.summary() == asym.summary()
+    assert [r.ttft_s for r in sym.records] \
+        == [r.ttft_s for r in asym.records]
+
+
+def test_asymmetric_nics_slow_class_streams_slower():
+    """A genuinely slower NIC class shows up in per-device stream time."""
+    slow = NetworkProfile("nic-slow", 150e6 / 8, 20e6 / 8)
+    specs = [RequestSpec(arrival_s=0.0, context_len=CTX, policy="cachegen",
+                         seed=i, device=i) for i in range(2)]
+    rep = make_cluster(n_devices=2,
+                       nic=["device-nic", slow]).run(specs)
+    fast_r, slow_r = rep.records
+    assert slow_r.stream_busy_s > fast_r.stream_busy_s * 1.5
+
+
+def test_starved_egress_slows_fleet_vs_generous():
+    starved = NetworkProfile("egress-starved", 160e6 / 8, 20e6 / 8)
+    specs = _tree_specs(5)
+    fat = make_cluster(n_devices=3, nic="device-nic", n_aps=2,
+                       egress=FAT_EGRESS).run(specs)
+    thin = make_cluster(n_devices=3, nic="device-nic", n_aps=2,
+                        egress=starved).run(specs)
+    assert thin.summary()["ttft_mean_s"] > fat.summary()["ttft_mean_s"]
+    shares = [r.stage_shares["egress"] for r in thin.records
+              if "egress" in r.stage_shares]
+    assert shares and all(s <= 1.0 for s in shares)
+
+
+def test_multi_ap_splits_uplink_contention():
+    """Two APs serve a NIC'd fleet faster than one congested AP."""
+    specs = _tree_specs(4)
+    one = make_cluster(n_devices=3, nic="device-nic", n_aps=1).run(specs)
+    two = make_cluster(n_devices=3, nic="device-nic", n_aps=2).run(specs)
+    assert two.summary()["ttft_mean_s"] < one.summary()["ttft_mean_s"]
+
+
+def test_ap_assignment_validation():
+    with pytest.raises(AssertionError):
+        make_cluster(n_devices=2, n_aps=2, ap_of_device=(0, 5))
+    with pytest.raises(AssertionError):
+        make_cluster(n_devices=2, n_aps=2, ap_of_device=(0,))
+    cl = make_cluster(n_devices=4, n_aps=2)
+    assert cl.ap_of_device == (0, 1, 0, 1)    # round-robin default
 
 
 def test_telemetry_policy_end_to_end_mixes_fleet():

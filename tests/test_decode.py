@@ -2,7 +2,6 @@
 behaviour, decode-off parity with the pre-decode fleet, and end-to-end
 cluster runs where decode contends with prefill on the run queue."""
 import numpy as np
-import pytest
 
 from repro.configs import SparKVConfig, get_config
 from repro.core.costs import PROFILES, RunQueueModel

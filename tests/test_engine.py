@@ -1,10 +1,7 @@
 """Discrete-event engine + runtime controller behaviour."""
-import numpy as np
-import pytest
-
 from repro.configs import SparKVConfig, get_config
 from repro.core import baselines as B
-from repro.core.costs import NETWORKS, PROFILES, NetworkProfile
+from repro.core.costs import NETWORKS, NetworkProfile
 from repro.data.workloads import DATASETS, synthesize
 
 CFG = get_config("sparkv-qwen3-4b")

@@ -7,7 +7,9 @@ from repro.core.costs import NETWORKS, RunQueueModel, SharedLinkModel
 from repro.core.engine import BandwidthIntegrator, LinkStarvedError
 from repro.serving.cluster import SharedLinkArbiter
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
-                                     nic_uplink_topology, single_link)
+                                     nic_uplink_topology, single_link,
+                                     tree_path, tree_topology,
+                                     uplink_stage_name)
 
 NET = NETWORKS["campus-wifi"]
 
@@ -292,3 +294,105 @@ def test_topology_rejects_mismatched_dt():
             "a": LinkStage("a", BandwidthIntegrator(np.full(10, 1e6), 0.01)),
             "b": LinkStage("b", BandwidthIntegrator(np.full(10, 1e6), 0.02)),
         })
+
+
+# ---------------------------------------------------------------------------
+# LinkTopology: three-hop cloud-egress tree
+# ---------------------------------------------------------------------------
+
+def _drain_all(topo, flows):
+    """Add (key, nbytes, path) flows at t=0, run to empty; returns the
+    completion sequence [(key, t_done), ...]."""
+    for key, nbytes, path in flows:
+        topo.add(key, nbytes, path=path)
+    done = []
+    while topo.n_active():
+        t, key = topo.next_completion()
+        topo.advance(t)
+        topo.complete(key)
+        done.append((key, t))
+    return done
+
+
+def test_tree_stage_names_and_paths():
+    assert uplink_stage_name(0, 1) == "uplink"        # single-AP: old name
+    assert uplink_stage_name(1, 3) == "uplink1"
+    assert tree_path(2, 1, 2, has_nic=True, has_egress=True) \
+        == ("nic2", "uplink1", "egress")
+    assert tree_path(0, 0, 1, has_nic=True, has_egress=False) \
+        == ("nic0", "uplink")                         # two-stage parity
+    assert tree_path(0, 0, 1, has_nic=False, has_egress=False) \
+        == ("uplink",)                                # single-stage parity
+    tree = tree_topology([flat_bw(40e6)] * 2, [flat_bw(60e6)] * 2, [0, 1],
+                         flat_bw(80e6))
+    assert set(tree.stages) == {"nic0", "nic1", "uplink0", "uplink1",
+                                "egress"}
+    with pytest.raises(AssertionError):
+        tree_topology([flat_bw(40e6)], [flat_bw(60e6)], [1])  # AP range
+
+
+def test_tree_unconstrained_egress_reproduces_two_stage_trace():
+    """Satellite parity: the three-hop tree with an egress stage far
+    above every per-flow share yields the exact two-stage completion
+    trace — same order, same times, bit-for-bit."""
+    flows = [(0, 30e6, ("nic0", "uplink")), (1, 45e6, ("nic1", "uplink")),
+             (2, 20e6, ("nic0", "uplink"))]
+    two = nic_uplink_topology([flat_bw(40e6), flat_bw(40e6)],
+                              flat_bw(60e6),
+                              uplink_link=SharedLinkModel(NET))
+    tree = tree_topology([flat_bw(40e6), flat_bw(40e6)], [flat_bw(60e6)],
+                         [0, 0], flat_bw(1e15),
+                         uplink_link=SharedLinkModel(NET))
+    done_two = _drain_all(two, flows)
+    done_tree = _drain_all(
+        tree, [(k, b, p + ("egress",)) for k, b, p in flows])
+    assert [k for k, _ in done_two] == [k for k, _ in done_tree]
+    for (_, ta), (_, tb) in zip(done_two, done_tree):
+        assert ta == tb                               # bit-for-bit
+
+
+def test_tree_starved_egress_governs_every_flow():
+    """Two flows on distinct NICs and distinct AP uplinks still drain at
+    the shared egress fair share when the egress is the bottleneck."""
+    tree = tree_topology([flat_bw(40e6)] * 2, [flat_bw(60e6)] * 2, [0, 1],
+                         flat_bw(20e6))
+    tree.add(0, 10e6, path=("nic0", "uplink0", "egress"))
+    tree.add(1, 10e6, path=("nic1", "uplink1", "egress"))
+    t, _ = tree.next_completion()
+    # egress share 10 MB/s each (ideal sharing): 10 MB in ~1 s, not the
+    # 0.25 s the NICs alone would take
+    assert abs(t - 1.0) < 2e-2
+
+
+def test_tree_multi_ap_isolates_uplink_contention():
+    """Same two flows: one congested AP vs one AP each (no binding
+    egress) — per-AP uplinks remove the cross-flow contention."""
+    one_ap = tree_topology([flat_bw(100e6)] * 2, [flat_bw(50e6)], [0, 0])
+    for k in range(2):
+        one_ap.add(k, 25e6, path=("nic" + str(k), "uplink"))
+    t_shared, _ = one_ap.next_completion()
+    two_ap = tree_topology([flat_bw(100e6)] * 2, [flat_bw(50e6)] * 2,
+                           [0, 1])
+    for k in range(2):
+        two_ap.add(k, 25e6, path=(f"nic{k}", f"uplink{k}"))
+    t_split, _ = two_ap.next_completion()
+    assert abs(t_shared - 1.0) < 2e-2                 # 25 MB/s fair share
+    assert abs(t_split - 0.5) < 2e-2                  # full 50 MB/s each
+
+
+def test_tree_stage_share_telemetry_per_stage():
+    """stage_shares breaks the flow's received fraction down by stage;
+    the egress entry reflects the fleet-wide crowd, the NIC entry stays
+    exclusive (1.0)."""
+    tree = tree_topology([flat_bw(40e6)] * 2, [flat_bw(60e6)] * 2, [0, 1],
+                         flat_bw(30e6))
+    tree.add(0, 5e6, path=("nic0", "uplink0", "egress"))
+    tree.add(1, 5e6, path=("nic1", "uplink1", "egress"))
+    t, key = tree.next_completion()
+    tree.advance(t)
+    shares = tree.stage_shares(key)
+    assert set(shares) == {f"nic{key}", f"uplink{key}", "egress"}
+    assert shares[f"nic{key}"] == 1.0                 # exclusive stage
+    assert shares[f"uplink{key}"] == 1.0              # own AP
+    assert abs(shares["egress"] - 0.5) < 1e-9         # two-flow crowd
+    assert tree.mean_share(key) == shares["egress"]   # last stage

@@ -20,7 +20,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import BandwidthIntegrator
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
-                                     single_link)
+                                     single_link, tree_topology)
 
 # durations in [0.05, 2.0] s: realistic chunk scale, no degenerate zeros
 DUR = st.floats(0.05, 2.0)
@@ -169,6 +169,45 @@ def test_topology_extra_stage_never_speeds_flow(seed, nbytes, jitter,
     fat.add(0, nbytes, path=("nic", "uplink"))
     t3, _ = fat.next_completion()
     assert np.isclose(t3, t1, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(st.integers(1, 5), st.floats(8e6, 60e6), st.floats(8e6, 60e6),
+       st.floats(8e6, 60e6))
+def test_three_stage_path_conserves_bytes(n_flows, nic_rate, up_rate,
+                                          eg_rate):
+    """Byte conservation across the full NIC -> AP uplink -> egress
+    path: every flow's per-interval drains sum exactly to its demand,
+    no flow finishes with bytes left, and the shared egress stage never
+    carries more than its capacity in any interval."""
+    tree = tree_topology([BandwidthIntegrator(np.full(6000, nic_rate),
+                                              0.01)
+                          for _ in range(n_flows)],
+                         [BandwidthIntegrator(np.full(6000, up_rate),
+                                              0.01) for _ in range(2)],
+                         [k % 2 for k in range(n_flows)],
+                         BandwidthIntegrator(np.full(6000, eg_rate), 0.01))
+    demands = {k: 1e6 * (k + 2) for k in range(n_flows)}
+    for k, nb in demands.items():
+        tree.add(k, nb, path=(f"nic{k}", f"uplink{k % 2}", "egress"))
+    drained = {k: 0.0 for k in demands}
+    t_prev, rem_prev = 0.0, dict(tree._rem)
+    while tree.n_active():
+        t, key = tree.next_completion()
+        tree.advance(t)
+        step = {k: rem_prev[k] - tree._rem[k] for k in tree._rem}
+        for k, v in step.items():
+            assert v >= -1e-6                 # flows never gain bytes
+            drained[k] += v
+        # the shared egress carries every flow: aggregate drain over the
+        # interval is bounded by its capacity
+        assert sum(step.values()) <= eg_rate * (t - t_prev) * (1 + 1e-6) \
+            + 1e-3
+        assert tree._rem[key] <= 1.0          # completing flow is spent
+        tree.complete(key)
+        t_prev, rem_prev = t, dict(tree._rem)
+    for k, nb in demands.items():
+        assert np.isclose(drained[k], nb, rtol=1e-5)
 
 
 @settings(max_examples=15, deadline=None, derandomize=True)

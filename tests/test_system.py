@@ -1,7 +1,4 @@
 """System-level invariants tying the layers together."""
-import numpy as np
-import pytest
-
 from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config,
                            shape_applicable)
 from repro.core.predictor import LatencyPredictor

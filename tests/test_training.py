@@ -1,6 +1,5 @@
 """Training substrate: checkpoint/restart bit-exactness, grad-accum
 equivalence, loss improvement, int8 gradient compression, elastic restore."""
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -58,8 +58,10 @@ def main(argv: list[str]) -> int:
         broken.extend(b)
     for b in broken:
         print(b)
-    print(f"checked {len(files)} files, {n_links} links, "
-          f"{len(broken)} broken")
+    print(
+        f"checked {len(files)} files, {n_links} links, "
+        f"{len(broken)} broken"
+    )
     return 1 if broken else 0
 
 
