@@ -21,6 +21,7 @@ BENCHES = [
     ("slo", "benchmarks.bench_slo_admission"),
     ("decode", "benchmarks.bench_decode_goodput"),
     ("topology", "benchmarks.bench_topology_tree"),
+    ("memory", "benchmarks.bench_kv_memory"),
     ("fig15", "benchmarks.bench_fig15_context_scaling"),
     ("fig16", "benchmarks.bench_fig16_breakdown"),
     ("quality", "benchmarks.bench_quality_validation"),

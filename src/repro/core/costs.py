@@ -196,6 +196,114 @@ class RunQueueModel:
 
 
 # ---------------------------------------------------------------------------
+# KV memory: disk tier + per-device memory-server configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DiskTierProfile:
+    """Bandwidth/latency profile of the local storage tier backing the
+    KV memory server (DRAM -> disk demotion, KVSwap-style). Unlike the
+    fluid link stages, disk transfers are modeled as a serial FIFO
+    server (``repro.serving.resources.DiskServer``): one transfer at a
+    time, each paying a fixed per-op latency plus bytes over the
+    direction's sequential bandwidth — the access pattern KV demotion
+    and reload actually produce (large sequential extents)."""
+    name: str
+    read_bw: float               # bytes/s, sequential read
+    write_bw: float              # bytes/s, sequential write
+    latency_s: float = 1.5e-4    # fixed per-op submission latency
+
+
+DISK_TIERS: dict[str, DiskTierProfile] = {
+    # mobile UFS 3.1 (sequential ~1.8/0.9 GB/s) — the default edge tier
+    "ufs-3.1": DiskTierProfile("ufs-3.1", 1.8e9, 0.9e9, 1.5e-4),
+    # NVMe on an edge box / laptop
+    "nvme-edge": DiskTierProfile("nvme-edge", 3.5e9, 2.5e9, 8e-5),
+    # older phones: eMMC 5.1 sequential ~300/150 MB/s
+    "emmc-5.1": DiskTierProfile("emmc-5.1", 0.30e9, 0.15e9, 4e-4),
+}
+
+
+def t_disk_read(nbytes: float, disk: DiskTierProfile,
+                n_ops: int = 1) -> float:
+    """Service time of a disk-tier read (no queueing): per-op latency
+    plus bytes over the sequential read bandwidth."""
+    return n_ops * disk.latency_s + nbytes / disk.read_bw
+
+
+def t_disk_write(nbytes: float, disk: DiskTierProfile,
+                 n_ops: int = 1) -> float:
+    """Service time of a disk-tier write (no queueing)."""
+    return n_ops * disk.latency_s + nbytes / disk.write_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryModel:
+    """Configuration of the per-device KV memory server
+    (``repro.serving.memory.KVMemoryServer``) — the memory counterpart
+    of :class:`SharedLinkModel` / :class:`RunQueueModel`.
+
+    Parameters
+    ----------
+    capacity_bytes : DRAM budget for resident KV on each device; ``None``
+        tracks residency (peak/percentile telemetry) without ever
+        evicting — bit-identical traces to a cluster without a memory
+        server.
+    policy : victim selection under pressure —
+        ``"lru"`` (least-recently-used among ready, unpinned residents),
+        ``"idle"`` (longest-idle among sequences *outside* the active
+        decode batch first — never thrashes a decoding sequence while a
+        parked one can pay instead; falls back to LRU when every
+        candidate is active), or
+        ``"bits"`` (evict-to-lower-bits: requantize the LRU victim's
+        resident KV down the ``compression.quantize.BITRATE_LEVELS``
+        ladder in place — the sequence keeps decoding at reduced
+        fidelity — and only demote/drop once it hits the ladder floor).
+    disk : backing tier for demotion — a :class:`DiskTierProfile`, a
+        ``DISK_TIERS`` name, or ``None`` (no tier: eviction drops the KV
+        outright and reload must restream or recompute).
+    reload : how an evicted context is restored —
+        ``"planner"`` (per-chunk overhead-aware split across disk read /
+        cloud restream / local recompute, greedy LPT over the projected
+        path loads — the SparKV decision re-posed at reload time),
+        ``"restream"`` / ``"recompute"`` / ``"disk"`` (single-path
+        baselines; ``"disk"`` falls back to restream when the KV was
+        dropped without a disk copy).
+    gate_frac : admission gate — hold a queued arrival while projected
+        residency (current + the request's full context) exceeds
+        ``gate_frac * capacity_bytes``; ``None`` disables gating. The
+        gate never holds an empty device (no deadlock).
+    resident_bits : bit-width resident KV is accounted at before any
+        evict-to-lower-bits downgrade (16 = bf16, the engine's decode
+        cost model assumption).
+    """
+    capacity_bytes: Optional[float] = None
+    policy: str = "lru"
+    disk: object = "ufs-3.1"      # DiskTierProfile | name | None
+    reload: str = "planner"
+    gate_frac: Optional[float] = None
+    resident_bits: int = 16
+
+    def __post_init__(self):
+        assert self.capacity_bytes is None or self.capacity_bytes > 0
+        assert self.policy in ("lru", "idle", "bits"), self.policy
+        assert self.reload in ("planner", "restream", "recompute",
+                               "disk"), self.reload
+        if isinstance(self.disk, str):
+            assert self.disk in DISK_TIERS, self.disk
+        assert self.gate_frac is None or 0 < self.gate_frac
+        assert self.resident_bits > 0
+
+    @property
+    def disk_profile(self) -> Optional[DiskTierProfile]:
+        if self.disk is None:
+            return None
+        return DISK_TIERS[self.disk] if isinstance(self.disk, str) \
+            else self.disk
+
+
+# ---------------------------------------------------------------------------
 # Ground-truth chunk latency (the simulated device)
 # ---------------------------------------------------------------------------
 

@@ -193,6 +193,23 @@ def _kv_bytes_per_token(cfg, context_len: int) -> float:
     return 2 * cfg.ssm.state_dim * cfg.d_model * cfg.ssm.expand
 
 
+def context_kv_bytes(cfg, context_len: int) -> float:
+    """Device-resident bytes of one request's fully assembled KV context
+    at bf16 (all layers): what the serving layer's KV memory server
+    charges a request once its prefill completes. SSM models hold a
+    fixed-size state per layer instead of a growing cache."""
+    return cfg.num_layers * _kv_bytes_per_token(cfg, context_len)
+
+
+def token_kv_bytes(cfg) -> float:
+    """Resident-KV growth of one decoded token (all layers, bf16): the
+    per-``DecodeTick`` charge on the KV memory server. Zero for SSM
+    models — their state does not grow with decoded tokens."""
+    if not cfg.num_heads:
+        return 0.0
+    return cfg.num_layers * _kv_bytes_per_token(cfg, 1)
+
+
 def decode_first_token_seconds(cfg, context_len: int,
                                profile: DeviceProfile) -> float:
     """One-token forward over the assembled cache (memory-bound)."""
@@ -305,6 +322,24 @@ class DecodeTick:
 class DecodeDone(DecodeTick):
     """The dispatch that delivers this request's final token (its
     ``token_times`` completes the quota requested via DecodeStart)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KVReload:
+    """A parked session's evicted KV must be restored before its next
+    decode dispatch. Emitted by the serving layer's KV memory server on
+    behalf of the session (the engine itself stays parked in ``Wait``
+    until the reload's legs complete and token deliveries resume — the
+    stall lands in TTLT/TPOT through the delayed ``DecodeTick`` s, so no
+    engine-side accounting changes). ``nbytes`` is the resident KV to
+    restore; ``from_disk`` says whether a demoted copy exists on the
+    disk tier (otherwise the KV was dropped and must be restreamed or
+    recomputed); ``mode`` is the ``MemoryModel.reload`` policy the
+    planner will apply."""
+    rid: int
+    nbytes: float
+    from_disk: bool
+    mode: str = "planner"
 
 
 @dataclasses.dataclass

@@ -87,14 +87,19 @@ import numpy as np
 
 from repro.core import baselines as B
 from repro.core.chunks import Chunk
-from repro.core.costs import (GroundTruthLatency, NetworkProfile, PROFILES,
+from repro.core.costs import (GroundTruthLatency, MemoryModel,
+                              NetworkProfile, PROFILES,
                               NETWORKS, RunQueueModel, SharedLinkModel)
 from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
                                DecodeDone, DecodeStart, DecodeTick,
-                               HybridEngine, StartAck, StreamStart, Wait)
-from repro.core.predictor import LatencyPredictor, queue_utilization
+                               HybridEngine, StartAck, StreamStart, Wait,
+                               context_kv_bytes, token_kv_bytes)
+from repro.core.predictor import (LatencyPredictor, backlog_delay_s,
+                                  queue_utilization)
 from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
 from repro.serving.decode import DecodeBatcher, DecodeConfig
+from repro.serving.memory import (KVMemoryServer, RELOAD_FLOW_BASE,
+                                  plan_reload)
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
                                      single_link, tree_path, tree_topology,
                                      uplink_stage_name)
@@ -185,6 +190,12 @@ class RequestRecord:
     # mean share received on every stage of the flow's path (NIC, AP
     # uplink, cloud egress) — the per-stage breakdown behind uplink_share
     stage_shares: dict = dataclasses.field(default_factory=dict)
+    # KV memory server outcome (zeros without an armed memory server —
+    # defaults keep pre-memory records bit-identical)
+    reload_s: float = 0.0                   # total decode stall on reloads
+    n_evictions: int = 0                    # times this KV was demoted/dropped
+    n_reloads: int = 0                      # reloads completed
+    kv_bits: int = 0                        # final resident bits (0=untracked)
 
 
 @dataclasses.dataclass
@@ -222,6 +233,11 @@ class _ActiveRequest:
     obs_load: int = 0
     obs_backlog_s: float = 0.0
     obs_n_flows: int = 0
+    # KV memory server state (memory-armed clusters only)
+    kv_chunk_bytes: float = 0.0             # resident KV per prefill chunk
+    reload_s: float = 0.0
+    n_evictions: int = 0
+    n_reloads: int = 0
 
 
 @dataclasses.dataclass
@@ -233,6 +249,10 @@ class FleetReport:
     makespan_s: float
     n_arrived: int
     shed: list = dataclasses.field(default_factory=list)
+    # fleet-aggregated KV memory-server telemetry (None when the cluster
+    # ran without one — summary() then omits the memory block entirely,
+    # keeping pre-memory summaries bit-identical)
+    memory: Optional[dict] = None
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft_s for r in self.records])
@@ -269,6 +289,7 @@ class FleetReport:
             "uplink_share_p99": pct(shares, 99),
             **self._decode_summary(),
             **self._slo_summary(),
+            **self._memory_summary(),
         }
 
     def _decode_summary(self) -> dict:
@@ -298,6 +319,28 @@ class FleetReport:
             "tpot_p50_s": pct(tpots, 50),
             "tpot_p99_s": pct(tpots, 99),
             "ttlt_p99_s": pct(ttlts, 99),
+        }
+
+    def _memory_summary(self) -> dict:
+        """KV memory block of :meth:`summary` — present only when the
+        cluster ran a memory server (``self.memory`` aggregated across
+        devices at end of run), so memory-less summaries stay
+        bit-identical to pre-memory fleets. Peak/p99 resident bytes are
+        the fleet-wide maxima; eviction/reload counters sum devices; the
+        request-level stall totals come from the records (so SLO misses
+        caused by reload stalls are attributable)."""
+        if self.memory is None:
+            return {}
+        return {
+            "peak_resident_bytes": self.memory["peak_resident_bytes"],
+            "resident_p99_bytes": self.memory["resident_p99_bytes"],
+            "n_evictions": self.memory["n_evictions"],
+            "n_downgrades": self.memory["n_downgrades"],
+            "n_reloads": self.memory["n_reloads"],
+            "reload_s_total": sum(r.reload_s for r in self.records),
+            "reload_p99_s": float(np.percentile(
+                [r.reload_s for r in self.records], 99))
+            if self.records else None,
         }
 
     def _slo_summary(self) -> dict:
@@ -343,7 +386,9 @@ class FleetReport:
 
 
 def telemetry_policy(spec: RequestSpec, cluster: "ServingCluster",
-                     *, bw_floor_frac: float = 0.4) -> str:
+                     *, bw_floor_frac: float = 0.4,
+                     decode_busy_frac: float = 1.0,
+                     memory_ceiling: float = 0.9) -> str:
     """Default ``policy_fn``: pick sparkv vs. local_prefill from the live
     resource servers at admission time.
 
@@ -355,11 +400,33 @@ def telemetry_policy(spec: RequestSpec, cluster: "ServingCluster",
     ``bw_floor_frac`` of the exclusive-link bandwidth *and* the device
     server still has slack for this request's compute, loading locally
     dominates. Otherwise run the sparkv planner, which keeps migrating
-    at runtime anyway."""
+    at runtime anyway.
+
+    Two further live signals veto the local-prefill switch (both
+    inactive on clusters without decode batches / a memory server, so
+    the pre-decode behaviour is unchanged):
+
+      - **decode occupancy** — a device whose decode batch is at or past
+        ``decode_busy_frac`` of ``max_batch`` has no compute slack the
+        run-queue load can see (decode dispatches are one job however
+        many sequences they carry), so forcing a full local prefill onto
+        it starves token generation;
+      - **memory pressure** — local prefill assembles the *whole*
+        context resident with no partial-stream escape hatch; above
+        ``memory_ceiling`` of the device's KV budget the stream path is
+        preferable since evictions would immediately claw back whatever
+        compute time local prefill saved.
+    """
     frac = cluster.projected_flow_frac(spec.device)
     link_starved = frac < bw_floor_frac
     device_slack = cluster.device_load(spec.device) < cluster.capacity
-    return "local_prefill" if link_starved and device_slack else "sparkv"
+    dcfg = cluster.decode_cfg if cluster.decode_cfg is not None \
+        else DecodeConfig()
+    decode_slack = cluster.decode_occupancy(spec.device) \
+        < decode_busy_frac * dcfg.max_batch
+    memory_ok = cluster.memory_pressure(spec.device) < memory_ceiling
+    return "local_prefill" if link_starved and device_slack \
+        and decode_slack and memory_ok else "sparkv"
 
 
 # ---------------------------------------------------------------------------
@@ -460,6 +527,8 @@ class ServingCluster:
                  decode: Optional[DecodeConfig] = None,
                  predictor: Optional[LatencyPredictor] = None,
                  refresh_every: int = 0,
+                 memory: Optional[MemoryModel] = None,
+                 memory_budget: Optional[float] = None,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
                  bw_seed: int = 991, seed: int = 0):
         self.cfg = cfg
@@ -503,6 +572,9 @@ class ServingCluster:
         self.decode_cfg = decode
         self.predictor = predictor
         self.refresh_every = refresh_every
+        if memory is None and memory_budget is not None:
+            memory = MemoryModel(capacity_bytes=float(memory_budget))
+        self.memory_model = memory
         self.bw_trace = bw_trace
         self.bw_dt = bw_dt
         self.bw_seed = bw_seed
@@ -513,6 +585,7 @@ class ServingCluster:
         self._run_queues: dict[int, DeviceRunQueue] = {}
         self._computing: dict[int, set] = {}
         self._batchers: dict[int, DecodeBatcher] = {}
+        self._memory: dict[int, KVMemoryServer] = {}
         self._n_finalized = 0                # predictor refresh cadence
 
     # ---- telemetry surface (valid during run()) ----
@@ -546,6 +619,18 @@ class ServingCluster:
         decode steps with (TPOT admission telemetry)."""
         bat = self._batchers.get(device)
         return bat.occupancy() if bat else 0
+
+    def memory_server(self, device: int = 0) -> Optional[KVMemoryServer]:
+        """The device's live KV memory server (None outside run() or on
+        a cluster without a ``memory``/``memory_budget``)."""
+        return self._memory.get(device)
+
+    def memory_pressure(self, device: int = 0) -> float:
+        """Resident KV over the device's capacity (0.0 unbounded or no
+        memory server) — the signal :func:`telemetry_policy` and SLO
+        admission fold in."""
+        m = self._memory.get(device)
+        return m.pressure() if m is not None else 0.0
 
     def _shared_stages(self, device: int) -> tuple:
         """(stage name, profiled mean bw, link model) for every *shared*
@@ -699,6 +784,11 @@ class ServingCluster:
         self._batchers = {}
         self._decode_free: dict[int, float] = {}    # closed-loop serializer
         pending_decode: dict = {}     # queued dispatch key -> Dispatch
+        self._memory = {d: KVMemoryServer(self.memory_model)
+                        for d in range(self.n_devices)} \
+            if self.memory_model is not None else {}
+        # rid -> [outstanding reload legs, t_begin, stream dequant tail]
+        reloads: dict[int, list] = {}
 
         active: dict[int, _ActiveRequest] = {}
         queue: list[tuple[int, RequestSpec]] = []
@@ -727,14 +817,20 @@ class ServingCluster:
             return self._batchers[dev]
 
         def start_jobs(dev: int, started):
-            """Jobs entering run-queue service: prefill chunks or decode
-            dispatches, told apart by key shape."""
+            """Jobs entering run-queue service: prefill chunks, decode
+            dispatches or reload recompute legs, told apart by key
+            shape."""
             nonlocal seq
             for key, t0, dur in started:
                 if key[0] == "decode":
                     d = pending_decode.pop(key)
                     heapq.heappush(heap, (t0 + dur, seq, "decode_done",
                                           key[1], (d, t0)))
+                    seq += 1
+                elif key[0] == "kvreload":
+                    heapq.heappush(heap, (t0 + dur, seq,
+                                          "reload_compute_done", key[1],
+                                          None))
                     seq += 1
                 else:
                     push_compute(key[0], key[1], t0, dur)
@@ -743,11 +839,18 @@ class ServingCluster:
             """Plan the device's next decode dispatch (if any) and put it
             on the device: through the run queue — where it competes with
             queued prefill chunks under the discipline — or back-to-back
-            on the closed-loop decode serializer."""
+            on the closed-loop decode serializer. Suspended (evicted)
+            batch members trigger their KV reload here — the lazy
+            "needed at next dispatch" point of the reload protocol."""
             nonlocal seq
             bat = self._batchers.get(dev)
             if bat is None:
                 return
+            if self._memory:
+                m = self._memory[dev]
+                for r in bat.suspended_active():
+                    if m.needs_reload(r):
+                        start_reload(r)
             d = bat.next_dispatch()
             if d is None:
                 return
@@ -768,6 +871,162 @@ class ServingCluster:
             heapq.heappush(heap, (t0 + d.duration_s, seq, "decode_done",
                                   dev, (d, t0)))
             seq += 1
+
+        # ---- KV memory server wiring (all no-ops when unarmed) ----
+        def pinned_rids(dev: int) -> set:
+            """Rids the memory server must not evict: members of the
+            device's in-flight decode dispatch (their KV is being read
+            this very service interval)."""
+            bat = self._batchers.get(dev)
+            if bat is not None and bat.inflight is not None:
+                return set(bat.inflight.token_offsets)
+            return set()
+
+        def idle_rids(dev: int) -> set:
+            """Sequences enrolled but parked outside the active decode
+            batch — the "idle" eviction policy's preferred victims."""
+            bat = self._batchers.get(dev)
+            return {mm.rid for mm in bat.waiting} if bat is not None \
+                else set()
+
+        def apply_evictions(dev: int, evs):
+            """Act on the server's eviction events: demoted/dropped
+            sequences are suspended in the batcher until their reload
+            lands; in-place bits downgrades need no suspension."""
+            bat = self._batchers.get(dev)
+            for ev in evs:
+                if ev.action == "downgrade":
+                    continue
+                vst = active.get(ev.rid)
+                if vst is not None:
+                    vst.n_evictions += 1
+                if bat is not None:
+                    bat.suspend(ev.rid)
+
+        def charge_kv(st: _ActiveRequest, nbytes: float):
+            dev = st.spec.device
+            evs = self._memory[dev].charge(st.rid, nbytes, now,
+                                           pinned=pinned_rids(dev),
+                                           idle=idle_rids(dev))
+            apply_evictions(dev, evs)
+
+        def start_reload(rid: int):
+            """Plan and launch an evicted context's reload on the real
+            servers: the stream leg as a link-topology flow, the
+            recompute leg as a device run-queue job, the disk leg on the
+            serial disk server — overlapping paths, exactly like the
+            prefill scheduler's stream/compute stages."""
+            nonlocal seq
+            st = active[rid]
+            dev = st.spec.device
+            m = self._memory[dev]
+            ev = m.begin_reload(rid, now)
+            plan = st.plan
+            n_chunks = max(plan.grid.size, 1)
+            res_per_chunk = ev.nbytes / n_chunks
+            chunks = [(plan.bytes_map[c], res_per_chunk,
+                       float(plan.planner.tc[plan.grid.index(c)]))
+                      for c in plan.grid.chunks()]
+            bw = self.net.mean_bw * self.projected_flow_frac(dev)
+            nic_bw = self.nic_mean_bw(dev)
+            if nic_bw is not None:
+                bw = min(bw, nic_bw)
+            pred = self.predictor
+            if pred is not None and not pred.refreshed:
+                pred = None
+            wait = pred.predict_wait_s(self.device_load(dev), self.capacity,
+                                       self.device_backlog_s(dev)) \
+                if pred is not None else None
+            if wait is None:
+                wait = backlog_delay_s(self.device_backlog_s(dev),
+                                       self.capacity)
+            # a recompute leg occupies the same device the decode batch
+            # needs: seed the comp path with the batch's outstanding
+            # service too (the run-queue backlog can't see dispatches not
+            # yet submitted), so the planner only recomputes when the
+            # device is genuinely the cheap path
+            bat = self._batchers.get(dev)
+            if bat is not None:
+                wait += bat.remaining_service_s()
+            rp = plan_reload(chunks, mode=self.memory_model.reload,
+                             profile=self.profile, stream_bw=max(bw, 1.0),
+                             comp_wait_s=wait, disk=m.disk,
+                             disk_backlog_s=m.disk.backlog_s(now)
+                             if m.disk is not None else 0.0,
+                             has_disk_copy=ev.from_disk)
+            legs = 0
+            if rp.stream_bytes > 0:
+                link_server.add(RELOAD_FLOW_BASE + rid, rp.stream_bytes,
+                                path=self._flow_path(dev))
+                legs += 1
+            if rp.comp_s > 0:
+                key = ("kvreload", rid)
+                if self.run_queue is not None:
+                    t0 = self._run_queues[dev].submit(
+                        key, rp.comp_s, now, flow=rid, weight=st.weight,
+                        remaining_s=rp.comp_s, deadline_s=st.deadline_abs)
+                    if t0 is not None:
+                        heapq.heappush(heap, (t0 + rp.comp_s, seq,
+                                              "reload_compute_done", rid,
+                                              None))
+                        seq += 1
+                else:
+                    self._computing[dev].add(key)
+                    heapq.heappush(heap, (now + rp.comp_s, seq,
+                                          "reload_compute_done", rid, None))
+                    seq += 1
+                legs += 1
+            if rp.disk_bytes > 0:
+                t_done = m.disk.submit(rp.disk_bytes, now, op="read",
+                                       n_ops=max(rp.n_disk, 1))
+                heapq.heappush(heap, (t_done, seq, "reload_disk_done", rid,
+                                      None))
+                seq += 1
+                legs += 1
+            if legs == 0:            # zero-byte restore (degenerate)
+                heapq.heappush(heap, (now, seq, "reload_disk_done", rid,
+                                      None))
+                seq += 1
+                legs = 1
+            reloads[rid] = [legs, now, rp.stream_proc_s]
+
+        def reload_leg_done(rid: int):
+            """One leg landed; when the last one does, the KV is resident
+            again: recharge (pinned), resume the batcher member, account
+            the stall, and let the batch dispatch."""
+            state = reloads[rid]
+            state[0] -= 1
+            if state[0] > 0:
+                return
+            t_begin = state[1]
+            del reloads[rid]
+            st = active[rid]
+            dev = st.spec.device
+            evs = self._memory[dev].finish_reload(
+                rid, now, pinned=pinned_rids(dev) | {rid},
+                idle=idle_rids(dev))
+            apply_evictions(dev, evs)
+            st.reload_s += now - t_begin
+            st.n_reloads += 1
+            bat = self._batchers.get(dev)
+            if bat is not None:
+                bat.resume(rid)
+            submit_decode(dev)
+
+        def gated(rid: int, spec: RequestSpec) -> bool:
+            """Admission gate on projected residency: hold a request
+            while current + its full context would exceed ``gate_frac``
+            of the device budget. Never gates an empty fleet, so the
+            queue always drains."""
+            mm = self.memory_model
+            if not self._memory or mm is None or mm.gate_frac is None \
+                    or mm.capacity_bytes is None or not active:
+                return False
+            need = context_kv_bytes(
+                self.cfg, wls[rid].n_t * self.spcfg.chunk_tokens) \
+                * mm.resident_bits / 16.0
+            m = self._memory[spec.device]
+            return m.resident_total + need > mm.gate_frac * m.capacity
 
         def drive(st: _ActiveRequest, reply=None, *, prime: bool = False):
             """Advance one session until it parks (Wait) or finishes.
@@ -804,6 +1063,9 @@ class ServingCluster:
                     elif isinstance(ev, DecodeStart):
                         # context assembled: join the device's continuous
                         # decode batch (token-boundary join)
+                        if self._memory:
+                            # fully assembled == evictable from here on
+                            self._memory[dev].mark_ready(st.rid, now)
                         batcher(dev).enroll(st.rid, ev.context_len,
                                             ev.n_tokens,
                                             deadline_s=st.deadline_abs)
@@ -888,6 +1150,15 @@ class ServingCluster:
                                 obs_backlog_s=self.device_backlog_s(
                                     spec.device),
                                 obs_n_flows=self.active_flows())
+            if self._memory:
+                self._memory[spec.device].admit(rid, now)
+                # resident bytes each assembled chunk adds (full-precision
+                # context KV split evenly across the plan's chunk grid,
+                # scaled to the server's resident storage width)
+                st.kv_chunk_bytes = (
+                    context_kv_bytes(self.cfg, plan.context_len)
+                    * self.memory_model.resident_bits / 16.0
+                    / max(plan.grid.size, 1))
             active[rid] = st
             res = drive(st, prime=True)
             if res is not None:
@@ -898,6 +1169,11 @@ class ServingCluster:
             nonlocal makespan
             active.pop(st.rid)
             self._computing[st.spec.device].discard(st.rid)
+            kv_bits = 0
+            if self._memory:
+                m = self._memory[st.spec.device]
+                kv_bits = m.bits_of(st.rid)
+                m.release(st.rid, now)
             quality = B._mixed_quality(res, st.plan.quality_bits)
             ttft = res.ttft_s - arrival_s[st.rid]
             ttlt = res.ttlt_s - arrival_s[st.rid]
@@ -931,7 +1207,9 @@ class ServingCluster:
                 downgraded=st.downgraded,
                 n_tokens_out=res.n_tokens_out, ttlt_s=ttlt,
                 tpot_s=res.tpot_s, tpot_slo_s=st.spec.tpot_slo_s,
-                stage_shares=link_server.stage_shares(st.rid)))
+                stage_shares=link_server.stage_shares(st.rid),
+                reload_s=st.reload_s, n_evictions=st.n_evictions,
+                n_reloads=st.n_reloads, kv_bits=kv_bits))
             if self.predictor is not None:
                 share = self.observed_bottleneck_share(st.rid)
                 self.predictor.observe(
@@ -948,12 +1226,18 @@ class ServingCluster:
             # unchanged from first-token accounting
             makespan = max(makespan, res.ttlt_s)
             while queue:
+                if gated(*queue[0]):
+                    break           # re-checked at the next finalize
                 if admit(*queue.pop(0)):
                     break
 
         guard = 0
         limit = 1000 + 200 * sum(w.n_t * w.n_l * max(w.n_h, 1) for w in wls) \
             + 50 * sum(s.max_new_tokens for s in specs)
+        if self.memory_model is not None \
+                and self.memory_model.capacity_bytes is not None:
+            # evict/reload cycles add events per token under pressure
+            limit *= 6
         while heap or link_server.n_active():
             guard += 1
             if guard > limit:
@@ -965,6 +1249,14 @@ class ServingCluster:
                 link_server.advance(t_done)
                 link_server.complete(rid)
                 now = t_done
+                if isinstance(rid, int) and rid >= RELOAD_FLOW_BASE:
+                    # reload restream leg landed: on-device dequant tail,
+                    # then the leg counts down like the others
+                    r = rid - RELOAD_FLOW_BASE
+                    heapq.heappush(heap, (t_done + reloads[r][2], seq,
+                                          "reload_stream_done", r, None))
+                    seq += 1
+                    continue
                 st = active[rid]
                 # decode+dequant tail happens on-device after the transfer
                 heapq.heappush(heap, (t_done + st.stream_t_proc, seq,
@@ -978,7 +1270,8 @@ class ServingCluster:
             link_server.advance(t)
             now = t
             if kind == "arrival":
-                if len(active) < self.max_concurrency:
+                if len(active) < self.max_concurrency and not queue \
+                        and not gated(rid, payload):
                     admit(rid, payload)
                 else:
                     queue.append((rid, payload))
@@ -992,6 +1285,8 @@ class ServingCluster:
                     start_jobs(st.spec.device, started)
                 else:
                     self._computing[st.spec.device].discard(rid)
+                if self._memory:
+                    charge_kv(st, st.kv_chunk_bytes)
                 res = drive(st, Completion("compute", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
@@ -1004,6 +1299,16 @@ class ServingCluster:
                     if self.run_queue is not None else []
                 bat.dispatch_done()
                 start_jobs(dev, started)
+                if self._memory:
+                    # the dispatch read every member's KV and grew it by
+                    # one token per generated token
+                    m = self._memory[dev]
+                    tkb = token_kv_bytes(self.cfg)
+                    for r in sorted(d.token_offsets):
+                        m.touch(r, now)
+                        if tkb > 0:
+                            charge_kv(active[r],
+                                      len(d.token_offsets[r]) * tkb)
                 # deliver this dispatch's tokens to every member session
                 for r in sorted(d.token_offsets):
                     st = active[r]
@@ -1020,18 +1325,53 @@ class ServingCluster:
                 chunk, t0 = payload
                 st = active[rid]
                 st.stream_chunk = None
+                if self._memory:
+                    charge_kv(st, st.kv_chunk_bytes)
                 res = drive(st, Completion("stream", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
+            elif kind in ("reload_stream_done", "reload_disk_done"):
+                reload_leg_done(rid)
+            elif kind == "reload_compute_done":
+                dev = active[rid].spec.device
+                if self.run_queue is not None:
+                    started = self._run_queues[dev].complete(
+                        ("kvreload", rid), t)
+                    start_jobs(dev, started)
+                else:
+                    self._computing[dev].discard(("kvreload", rid))
+                reload_leg_done(rid)
         assert not active and not queue, "cluster finished with stuck work"
         assert all(b.idle() for b in self._batchers.values()), \
             "cluster finished with undrained decode batches"
+        assert not reloads, "cluster finished with in-flight reloads"
+        mem_summary = None
+        if self._memory:
+            tele = [m.telemetry() for m in self._memory.values()]
+            caps = [t["capacity_bytes"] for t in tele]
+            mem_summary = {
+                "capacity_bytes": (None if any(c is None for c in caps)
+                                   else sum(caps)),
+                "peak_resident_bytes": max(
+                    t["peak_resident_bytes"] for t in tele),
+                "resident_p99_bytes": max(
+                    t["resident_p99_bytes"] for t in tele),
+            }
+            for k in ("n_evictions", "n_downgrades", "n_demotions",
+                      "n_drops", "n_reloads", "reload_bytes",
+                      "charged_bytes_total", "disk_bytes_written",
+                      "disk_bytes_read", "disk_busy_s"):
+                vals = [t[k] for t in tele if k in t]
+                if vals:
+                    mem_summary[k] = type(vals[0])(sum(vals))
         # clear the whole telemetry surface so a reused cluster never
         # exposes one run's end-state to the next run's policy_fn
         self._link_server = None
         self._run_queues = {}
         self._computing = {}
         self._batchers = {}
+        self._memory = {}
         return FleetReport(records=sorted(records, key=lambda r: r.rid),
                            makespan_s=makespan, n_arrived=len(specs),
-                           shed=sorted(shed, key=lambda s: s.rid))
+                           shed=sorted(shed, key=lambda s: s.rid),
+                           memory=mem_summary)

@@ -104,6 +104,11 @@ class DecodeBatcher:
         self.active: dict[int, _Member] = {}
         self.waiting: list[_Member] = []
         self.inflight: Optional[Dispatch] = None
+        # rids whose KV was evicted by the memory server: they keep their
+        # batch slot (continuous-batching membership is the contract) but
+        # are excluded from dispatches until the cluster resumes them
+        # after the reload lands
+        self.suspended: set = set()
         self._seq = 0
         self.tokens_dispatched = 0
         self.busy_s = 0.0
@@ -136,6 +141,23 @@ class DecodeBatcher:
               if m.deadline_s is not None]
         return min(ds) if ds else None
 
+    # ---- KV eviction protocol (memory server) ----
+    def suspend(self, rid: int) -> None:
+        """Exclude an enrolled member from future dispatches (its KV was
+        demoted/dropped); it keeps its batch slot until resumed."""
+        self.suspended.add(rid)
+
+    def resume(self, rid: int) -> None:
+        """Reload landed: the member decodes again from the next
+        dispatch boundary."""
+        self.suspended.discard(rid)
+
+    def suspended_active(self) -> list[int]:
+        """Suspended members currently holding a batch slot — the rids
+        whose KV must be reloaded for the batch to make progress (the
+        cluster starts a reload for each before planning a dispatch)."""
+        return sorted(r for r in self.active if r in self.suspended)
+
     # ---- protocol ----
     def enroll(self, rid: int, context_len: int, n_tokens: int, *,
                deadline_s: Optional[float] = None) -> None:
@@ -156,7 +178,11 @@ class DecodeBatcher:
         here (membership is frozen for the dispatch)."""
         if self.inflight is not None or not self.active:
             return None
-        live = sorted(self.active.values(), key=lambda m: m.rid)
+        live = sorted((m for m in self.active.values()
+                       if m.rid not in self.suspended),
+                      key=lambda m: m.rid)
+        if not live:
+            return None               # every slot-holder awaits a reload
         offs: dict[int, list] = {m.rid: [] for m in live}
         busy = {m.rid: 0.0 for m in live}
         t = 0.0

@@ -40,7 +40,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.costs import SharedLinkModel
+from repro.core.costs import DiskTierProfile, SharedLinkModel
 from repro.core.engine import BandwidthIntegrator, LinkStarvedError
 
 
@@ -497,3 +497,58 @@ class DeviceRunQueue:
         """Retire an in-service job; returns newly started jobs."""
         del self._running[key]
         return self._dispatch(t)
+
+
+# ---------------------------------------------------------------------------
+# Serial disk-tier server (KV memory backing store)
+# ---------------------------------------------------------------------------
+
+
+class DiskServer:
+    """Serial FIFO transfer server for the KV memory server's disk tier.
+
+    One transfer at a time, busy-until semantics: a submitted transfer
+    starts when every earlier one has drained (demotion *writes* and
+    reload *reads* share the one device, so a reload issued during an
+    eviction storm genuinely queues behind the writes), and occupies the
+    device for ``n_ops * latency + bytes / bw`` of its direction
+    (:func:`repro.core.costs.t_disk_read` / ``t_disk_write``). Unlike
+    the fluid link stages there is no fair sharing — storage queues
+    serially at these transfer sizes — so ``submit`` can return the
+    completion time immediately and the driver schedules it as a heap
+    event. ``backlog_s(now)`` (time until the device drains) is the
+    telemetry the reload planner seeds its disk-path load with.
+    """
+
+    def __init__(self, profile: DiskTierProfile):
+        self.profile = profile
+        self.free_at = 0.0
+        self.busy_s = 0.0
+        self.bytes_read = 0.0
+        self.bytes_written = 0.0
+        self.n_reads = 0
+        self.n_writes = 0
+        self.waits: list[float] = []         # per-transfer start - submit
+
+    def backlog_s(self, now: float) -> float:
+        """Seconds until the device drains everything already queued."""
+        return max(self.free_at - now, 0.0)
+
+    def submit(self, nbytes: float, t: float, *, op: str = "read",
+               n_ops: int = 1) -> float:
+        """Queue one transfer; returns its completion time."""
+        assert op in ("read", "write"), op
+        p = self.profile
+        bw = p.read_bw if op == "read" else p.write_bw
+        dur = n_ops * p.latency_s + nbytes / bw
+        t0 = max(t, self.free_at)
+        self.waits.append(t0 - t)
+        self.free_at = t0 + dur
+        self.busy_s += dur
+        if op == "read":
+            self.bytes_read += nbytes
+            self.n_reads += 1
+        else:
+            self.bytes_written += nbytes
+            self.n_writes += 1
+        return self.free_at

@@ -41,8 +41,11 @@ from typing import Optional
 
 from repro.compression.quantize import downgrade_ladder
 from repro.core.costs import t_stream as chunk_stream_seconds
-from repro.core.engine import decode_first_token_seconds, decode_step_seconds
+from repro.core.engine import (context_kv_bytes,
+                               decode_first_token_seconds,
+                               decode_step_seconds)
 from repro.core.predictor import backlog_delay_s
+from repro.serving.memory import predicted_reload_stall_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,7 +188,14 @@ def predict_ttft(plan, cluster, spec, now: float, *,
                          cluster.capacity))
     t_first = decode_first_token_seconds(cluster.cfg, plan.context_len,
                                          cluster.profile)
-    return (now - spec.arrival_s) + max(t_stream, t_comp) + t_first
+    # memory-armed clusters: admitting this context may push the device
+    # over its KV budget, and the induced evict/reload churn lands
+    # squarely in this request's first-token path (zero when the cluster
+    # has no finite memory server — the bit-parity guarantee)
+    t_stall = predicted_reload_stall_s(
+        cluster, spec.device,
+        context_kv_bytes(cluster.cfg, plan.context_len))
+    return (now - spec.arrival_s) + max(t_stream, t_comp) + t_first + t_stall
 
 
 def predict_tpot(cluster, spec, context_len: int) -> float:
@@ -201,7 +211,14 @@ def predict_tpot(cluster, spec, context_len: int) -> float:
     dcfg = getattr(cluster, "decode_cfg", None) or DecodeConfig()
     b = min(cluster.decode_occupancy(spec.device) + 1, dcfg.max_batch)
     mid_len = context_len + max(spec.max_new_tokens, 1) // 2
-    return decode_step_seconds(cluster.cfg, [mid_len] * b, cluster.profile)
+    step = decode_step_seconds(cluster.cfg, [mid_len] * b, cluster.profile)
+    # evict/reload stalls amortize across the whole response: a sequence
+    # parked for a reload delivers no tokens while the stall runs, which
+    # is exactly a per-token latency hit of stall / n_tokens (zero on
+    # memory-less clusters)
+    stall = predicted_reload_stall_s(
+        cluster, spec.device, context_kv_bytes(cluster.cfg, context_len))
+    return step + stall / max(spec.max_new_tokens, 1)
 
 
 def decide_admission(policy: SLOPolicy, plan, cluster, spec,

@@ -104,6 +104,14 @@ def test_some_results_are_checked_in():
     assert RESULTS, "results/benchmarks/ has no checked-in JSONs"
 
 
+def test_memory_bench_registered():
+    """The KV memory bench is wired into the runner under the ``memory``
+    name and its ``kv_memory`` save literal is discoverable by the
+    checked-in-results validator."""
+    assert ("memory", "benchmarks.bench_kv_memory") in BENCHES
+    assert "kv_memory" in _registered_save_names()
+
+
 @pytest.mark.parametrize("path", RESULTS,
                          ids=[os.path.basename(p) for p in RESULTS])
 def test_checked_in_result_validates_against_registry(path):

@@ -18,7 +18,9 @@ mixes rather than hand-picked examples:
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.core.costs import MemoryModel
 from repro.core.engine import BandwidthIntegrator
+from repro.serving.memory import KVMemoryServer
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
                                      single_link, tree_topology)
 
@@ -231,3 +233,71 @@ def test_topology_advance_conserves_total_bytes(n_flows, rate):
         assert topo._rem[key] <= 1.0          # bytes: demand fully spent
         topo.complete(key)
         t_prev, rem_prev = t, dict(topo._rem)
+
+
+# ---------------------------------------------------------------------------
+# KV memory server: byte conservation over arbitrary legal op sequences
+# ---------------------------------------------------------------------------
+
+_MEM_OP = st.tuples(st.integers(0, 5),       # op selector
+                    st.integers(0, 7),       # rid selector (mod live set)
+                    st.floats(0.01, 2.0))    # charge size (GB)
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.lists(_MEM_OP, min_size=1, max_size=40),
+       st.sampled_from(["lru", "idle", "bits"]),
+       st.sampled_from([None, "ufs-3.1", "emmc-5.1"]),
+       st.floats(0.5, 4.0))
+def test_memory_ledger_conservation(ops, policy, disk, cap_gb):
+    """For any legal interleaving of admit/charge/ready/evict/reload/
+    release under any policy and disk tier, every byte ever charged is
+    exactly one of resident, on disk, dropped, or freed — checked after
+    every single operation — and per-rid residency sums to the total."""
+    GB = 1e9
+    m = KVMemoryServer(MemoryModel(capacity_bytes=cap_gb * GB,
+                                   policy=policy, disk=disk))
+    t, next_rid, live = 0.0, 0, []
+
+    def check():
+        assert abs(m.ledger_balance()) < 1.0
+        assert np.isclose(m.resident_total,
+                          sum(r.bytes for r in m._res.values()), atol=1.0)
+        assert np.isclose(m.disk_total,
+                          sum(r.disk_bytes for r in m._res.values()),
+                          atol=1.0)
+        assert m.resident_total >= -1.0 and m.disk_total >= -1.0
+
+    for op, pick, size in ops:
+        t += 0.1
+        if op == 0 or not live:                 # admit a new rid
+            m.admit(next_rid, t)
+            live.append(next_rid)
+            next_rid += 1
+        elif op == 1:                           # charge growth
+            rid = live[pick % len(live)]
+            if not m._res[rid].evicted:
+                m.charge(rid, size * GB, t)
+        elif op == 2:                           # assembly complete
+            m.mark_ready(live[pick % len(live)], t)
+        elif op == 3:                           # reload an evicted rid
+            rid = live[pick % len(live)]
+            if m.needs_reload(rid):
+                ev = m.begin_reload(rid, t)
+                check()
+                assert ev.nbytes >= 0
+                m.finish_reload(rid, t + 0.05)
+        elif op == 4:                           # finalize
+            rid = live[pick % len(live)]
+            if not m._res[rid].reloading:
+                m.release(rid, t)
+                live.remove(rid)
+        else:                                   # touch (LRU reordering)
+            m.touch(live[pick % len(live)], t)
+        check()
+    for rid in list(live):                      # drain: all bytes settle
+        m.release(rid, t)
+        check()
+    assert abs(m.resident_total) < 1.0 and abs(m.disk_total) < 1.0
+    assert np.isclose(m.charged_total, m.freed_total + m.dropped_total,
+                      atol=1.0)
