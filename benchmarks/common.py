@@ -16,11 +16,44 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "benchmarks")
 QUICK_DIR = os.path.join(RESULTS_DIR, "quick")
 
+# --profile (benchmarks/run.py): stamp a ``_profile`` block into every
+# saved JSON with the bench's wall-clock and the simulator-throughput
+# counters accumulated by ServingCluster.run since begin_bench().
+PROFILE = False
+_bench_t0: float | None = None
+
+
+def begin_bench() -> None:
+    """Mark the start of one bench module's run: reset the wall clock
+    and the process-wide simulator event counters so the next
+    :func:`save` snapshots only this bench's activity."""
+    global _bench_t0
+    _bench_t0 = time.time()
+    try:
+        from repro.serving.simcore import STATS
+        STATS.reset()
+    except ImportError:                         # src not on path
+        pass
+
+
+def _profile_snapshot() -> dict:
+    prof: dict = {}
+    if _bench_t0 is not None:
+        prof["bench_wall_s"] = time.time() - _bench_t0
+    try:
+        from repro.serving.simcore import STATS
+        prof.update(STATS.snapshot())
+    except ImportError:
+        pass
+    return prof
+
 
 def save(name: str, payload: dict, *, quick: bool = False):
     out_dir = QUICK_DIR if quick else RESULTS_DIR
     os.makedirs(out_dir, exist_ok=True)
     payload = dict(payload, _bench=name, _time=time.time(), _quick=quick)
+    if PROFILE:
+        payload["_profile"] = _profile_snapshot()
     path = os.path.join(out_dir, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=str)

@@ -1,12 +1,21 @@
 """Benchmark harness driver: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,fig13]
+                                          [--profile]
+
+``--profile`` stamps a ``_profile`` block into every saved JSON: the
+bench's wall-clock plus the simulator-throughput counters (events,
+sim wall-clock, events/s) accumulated across its ``ServingCluster.run``
+calls — sim throughput becomes a recorded metric alongside the bench's
+own numbers.
 """
 from __future__ import annotations
 
 import argparse
 import time
 import traceback
+
+from benchmarks import common
 
 BENCHES = [
     ("table1", "benchmarks.bench_table1_stream_vs_compute"),
@@ -26,6 +35,7 @@ BENCHES = [
     ("fig16", "benchmarks.bench_fig16_breakdown"),
     ("quality", "benchmarks.bench_quality_validation"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("simcore", "benchmarks.bench_simcore"),
 ]
 
 
@@ -33,7 +43,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--profile", action="store_true",
+                    help="stamp wall-clock + simulator events/s metadata "
+                         "into every saved bench JSON")
     args = ap.parse_args()
+    common.PROFILE = args.profile
     only = set(args.only.split(",")) if args.only else None
     if only:
         known = [name for name, _ in BENCHES]
@@ -52,6 +66,7 @@ def main():
         try:
             import importlib
             mod = importlib.import_module(module)
+            common.begin_bench()
             mod.run(quick=args.quick)
             results[name] = f"OK ({time.time() - t0:.0f}s)"
         except Exception as e:  # noqa: BLE001

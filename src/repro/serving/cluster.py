@@ -80,7 +80,7 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
-import heapq
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -101,8 +101,11 @@ from repro.serving.decode import DecodeBatcher, DecodeConfig
 from repro.serving.memory import (KVMemoryServer, RELOAD_FLOW_BASE,
                                   plan_reload)
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
-                                     single_link, tree_path, tree_topology,
+                                     ScalarLinkTopology, single_link,
+                                     tree_path, tree_topology,
                                      uplink_stage_name)
+from repro.serving.simcore import STATS as SIM_STATS
+from repro.serving.simcore import EventKind, EventQueue
 from repro.serving.slo import (SLOPolicy, decide_admission,
                                plan_compute_seconds)
 
@@ -507,6 +510,16 @@ class ServingCluster:
         to pre-decode behaviour whether or not ``decode`` is set; a
         decoding trace with ``decode=None`` uses ``DecodeConfig()``
         defaults.
+    link_core : ``"vectorized"`` (default) drives the struct-of-arrays
+        :class:`repro.serving.resources.LinkTopology`; ``"scalar"``
+        selects the per-flow reference core
+        (:class:`~repro.serving.resources.ScalarLinkTopology`) — the
+        parity oracle the vectorized core is locked against.
+    link_telemetry : ``False`` skips per-flow share accumulation in the
+        link server (``RequestRecord.uplink_share`` reports 1.0 and
+        ``stage_shares`` ``{}``); default ``True`` preserves current
+        reports. Fleets that never read share telemetry save the
+        per-event accumulation entirely.
     bw_trace / bw_dt : optional explicit uplink trace (otherwise an OU
         trace is drawn from the network profile with ``bw_seed``).
     """
@@ -529,6 +542,8 @@ class ServingCluster:
                  refresh_every: int = 0,
                  memory: Optional[MemoryModel] = None,
                  memory_budget: Optional[float] = None,
+                 link_core: str = "vectorized",
+                 link_telemetry: bool = True,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
                  bw_seed: int = 991, seed: int = 0):
         self.cfg = cfg
@@ -575,6 +590,9 @@ class ServingCluster:
         if memory is None and memory_budget is not None:
             memory = MemoryModel(capacity_bytes=float(memory_budget))
         self.memory_model = memory
+        assert link_core in ("vectorized", "scalar"), link_core
+        self.link_core = link_core
+        self.link_telemetry = link_telemetry
         self.bw_trace = bw_trace
         self.bw_dt = bw_dt
         self.bw_seed = bw_seed
@@ -587,6 +605,8 @@ class ServingCluster:
         self._batchers: dict[int, DecodeBatcher] = {}
         self._memory: dict[int, KVMemoryServer] = {}
         self._n_finalized = 0                # predictor refresh cadence
+        # events / wall-clock of the most recent run() (simcore profiling)
+        self.last_sim_stats: Optional[dict] = None
 
     # ---- telemetry surface (valid during run()) ----
     @property
@@ -718,9 +738,12 @@ class ServingCluster:
         egress profile — all on deterministic per-stage seeds, so the
         single-AP egress-free tree is bit-for-bit the two-stage (or,
         without NICs, single-stage) topology of earlier PRs."""
+        topo_cls = ScalarLinkTopology if self.link_core == "scalar" \
+            else LinkTopology
         if self._nic_profiles is None and self.n_aps == 1 \
                 and self.egress is None:
-            return single_link(integrator, self.link)
+            return single_link(integrator, self.link, cls=topo_cls,
+                               telemetry=self.link_telemetry)
         horizon_s = (len(integrator.cum) - 1) * integrator.dt
 
         def draw(profile: NetworkProfile, seed: int) -> BandwidthIntegrator:
@@ -741,7 +764,9 @@ class ServingCluster:
         return tree_topology(nics, uplinks, self.ap_of_device, egress,
                              uplink_link=self.link,
                              nic_link=self.nic_link,
-                             egress_link=self.egress_link)
+                             egress_link=self.egress_link,
+                             cls=topo_cls,
+                             telemetry=self.link_telemetry)
 
     def _flow_path(self, device: int) -> tuple:
         return tree_path(device, self.ap_of_device[device], self.n_aps,
@@ -794,21 +819,20 @@ class ServingCluster:
         queue: list[tuple[int, RequestSpec]] = []
         records: list[RequestRecord] = []
         shed: list[ShedRecord] = []
-        # heap: (t, seq, kind, rid, payload)
-        heap: list = []
-        seq = 0
-        for rid, s in enumerate(specs):
-            heapq.heappush(heap, (s.arrival_s, seq, "arrival", rid, s))
-            seq += 1
+        # typed event heap (repro.serving.simcore): the whole arrival
+        # trace loads in one batched heapify; pushes carry EventKind ints
+        # so the dispatch below is an int compare, not a string compare
+        events = EventQueue()
+        events.push_many((s.arrival_s, EventKind.ARRIVAL, rid, s)
+                         for rid, s in enumerate(specs))
         arrival_s = {rid: s.arrival_s for rid, s in enumerate(specs)}
         now = 0.0
         makespan = 0.0
+        n_link_events = 0
+        t_wall0 = time.perf_counter()
 
         def push_compute(rid: int, chunk: Chunk, t0: float, dur: float):
-            nonlocal seq
-            heapq.heappush(heap, (t0 + dur, seq, "compute_done", rid,
-                                  (chunk, t0)))
-            seq += 1
+            events.push(t0 + dur, EventKind.COMPUTE_DONE, rid, (chunk, t0))
 
         def batcher(dev: int) -> DecodeBatcher:
             if dev not in self._batchers:
@@ -820,18 +844,14 @@ class ServingCluster:
             """Jobs entering run-queue service: prefill chunks, decode
             dispatches or reload recompute legs, told apart by key
             shape."""
-            nonlocal seq
             for key, t0, dur in started:
                 if key[0] == "decode":
                     d = pending_decode.pop(key)
-                    heapq.heappush(heap, (t0 + dur, seq, "decode_done",
-                                          key[1], (d, t0)))
-                    seq += 1
+                    events.push(t0 + dur, EventKind.DECODE_DONE, key[1],
+                                (d, t0))
                 elif key[0] == "kvreload":
-                    heapq.heappush(heap, (t0 + dur, seq,
-                                          "reload_compute_done", key[1],
-                                          None))
-                    seq += 1
+                    events.push(t0 + dur, EventKind.RELOAD_COMPUTE_DONE,
+                                key[1], None)
                 else:
                     push_compute(key[0], key[1], t0, dur)
 
@@ -842,7 +862,6 @@ class ServingCluster:
             on the closed-loop decode serializer. Suspended (evicted)
             batch members trigger their KV reload here — the lazy
             "needed at next dispatch" point of the reload protocol."""
-            nonlocal seq
             bat = self._batchers.get(dev)
             if bat is None:
                 return
@@ -868,9 +887,8 @@ class ServingCluster:
             else:
                 t0 = max(now, self._decode_free.get(dev, 0.0))
                 self._decode_free[dev] = t0 + d.duration_s
-            heapq.heappush(heap, (t0 + d.duration_s, seq, "decode_done",
-                                  dev, (d, t0)))
-            seq += 1
+            events.push(t0 + d.duration_s, EventKind.DECODE_DONE, dev,
+                        (d, t0))
 
         # ---- KV memory server wiring (all no-ops when unarmed) ----
         def pinned_rids(dev: int) -> set:
@@ -916,7 +934,6 @@ class ServingCluster:
             recompute leg as a device run-queue job, the disk leg on the
             serial disk server — overlapping paths, exactly like the
             prefill scheduler's stream/compute stages."""
-            nonlocal seq
             st = active[rid]
             dev = st.spec.device
             m = self._memory[dev]
@@ -966,27 +983,21 @@ class ServingCluster:
                         key, rp.comp_s, now, flow=rid, weight=st.weight,
                         remaining_s=rp.comp_s, deadline_s=st.deadline_abs)
                     if t0 is not None:
-                        heapq.heappush(heap, (t0 + rp.comp_s, seq,
-                                              "reload_compute_done", rid,
-                                              None))
-                        seq += 1
+                        events.push(t0 + rp.comp_s,
+                                    EventKind.RELOAD_COMPUTE_DONE, rid,
+                                    None)
                 else:
                     self._computing[dev].add(key)
-                    heapq.heappush(heap, (now + rp.comp_s, seq,
-                                          "reload_compute_done", rid, None))
-                    seq += 1
+                    events.push(now + rp.comp_s,
+                                EventKind.RELOAD_COMPUTE_DONE, rid, None)
                 legs += 1
             if rp.disk_bytes > 0:
                 t_done = m.disk.submit(rp.disk_bytes, now, op="read",
                                        n_ops=max(rp.n_disk, 1))
-                heapq.heappush(heap, (t_done, seq, "reload_disk_done", rid,
-                                      None))
-                seq += 1
+                events.push(t_done, EventKind.RELOAD_DISK_DONE, rid, None)
                 legs += 1
             if legs == 0:            # zero-byte restore (degenerate)
-                heapq.heappush(heap, (now, seq, "reload_disk_done", rid,
-                                      None))
-                seq += 1
+                events.push(now, EventKind.RELOAD_DISK_DONE, rid, None)
                 legs = 1
             reloads[rid] = [legs, now, rp.stream_proc_s]
 
@@ -1238,13 +1249,13 @@ class ServingCluster:
                 and self.memory_model.capacity_bytes is not None:
             # evict/reload cycles add events per token under pressure
             limit *= 6
-        while heap or link_server.n_active():
+        while events or link_server.n_active():
             guard += 1
             if guard > limit:
                 raise RuntimeError("cluster livelock")
             nc = link_server.next_completion()
-            t_heap = heap[0][0] if heap else float("inf")
-            if nc is not None and nc[0] <= t_heap:
+            if nc is not None and nc[0] <= events.peek_t():
+                n_link_events += 1
                 t_done, rid = nc
                 link_server.advance(t_done)
                 link_server.complete(rid)
@@ -1253,29 +1264,28 @@ class ServingCluster:
                     # reload restream leg landed: on-device dequant tail,
                     # then the leg counts down like the others
                     r = rid - RELOAD_FLOW_BASE
-                    heapq.heappush(heap, (t_done + reloads[r][2], seq,
-                                          "reload_stream_done", r, None))
-                    seq += 1
+                    events.push(t_done + reloads[r][2],
+                                EventKind.RELOAD_STREAM_DONE, r, None)
                     continue
                 st = active[rid]
                 # decode+dequant tail happens on-device after the transfer
-                heapq.heappush(heap, (t_done + st.stream_t_proc, seq,
-                                      "stream_avail", rid,
-                                      (st.stream_chunk, st.stream_t0)))
-                seq += 1
+                events.push(t_done + st.stream_t_proc,
+                            EventKind.STREAM_AVAIL, rid,
+                            (st.stream_chunk, st.stream_t0))
                 continue
-            if not heap:
+            if not events:
                 break
-            t, _, kind, rid, payload = heapq.heappop(heap)
+            ev = events.pop()
+            t, kind, rid, payload = ev.t, ev.kind, ev.rid, ev.payload
             link_server.advance(t)
             now = t
-            if kind == "arrival":
+            if kind == EventKind.ARRIVAL:
                 if len(active) < self.max_concurrency and not queue \
                         and not gated(rid, payload):
                     admit(rid, payload)
                 else:
                     queue.append((rid, payload))
-            elif kind == "compute_done":
+            elif kind == EventKind.COMPUTE_DONE:
                 chunk, t0 = payload
                 st = active[rid]
                 st.comp_done_s += t - t0
@@ -1290,7 +1300,7 @@ class ServingCluster:
                 res = drive(st, Completion("compute", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
-            elif kind == "decode_done":
+            elif kind == EventKind.DECODE_DONE:
                 dev = rid                      # decode events carry the
                 d, t0 = payload                # device in the rid slot
                 bat = self._batchers[dev]
@@ -1299,18 +1309,19 @@ class ServingCluster:
                     if self.run_queue is not None else []
                 bat.dispatch_done()
                 start_jobs(dev, started)
+                members = sorted(d.token_offsets)   # one sort per dispatch
                 if self._memory:
                     # the dispatch read every member's KV and grew it by
                     # one token per generated token
                     m = self._memory[dev]
                     tkb = token_kv_bytes(self.cfg)
-                    for r in sorted(d.token_offsets):
+                    for r in members:
                         m.touch(r, now)
                         if tkb > 0:
                             charge_kv(active[r],
                                       len(d.token_offsets[r]) * tkb)
                 # deliver this dispatch's tokens to every member session
-                for r in sorted(d.token_offsets):
+                for r in members:
                     st = active[r]
                     times = tuple(t0 + off for off in d.token_offsets[r])
                     cls = DecodeDone if r in d.finished else DecodeTick
@@ -1321,7 +1332,7 @@ class ServingCluster:
                     if res is not None:
                         finalize(st, res)
                 submit_decode(dev)
-            elif kind == "stream_avail":
+            elif kind == EventKind.STREAM_AVAIL:
                 chunk, t0 = payload
                 st = active[rid]
                 st.stream_chunk = None
@@ -1330,9 +1341,10 @@ class ServingCluster:
                 res = drive(st, Completion("stream", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
-            elif kind in ("reload_stream_done", "reload_disk_done"):
+            elif kind in (EventKind.RELOAD_STREAM_DONE,
+                          EventKind.RELOAD_DISK_DONE):
                 reload_leg_done(rid)
-            elif kind == "reload_compute_done":
+            elif kind == EventKind.RELOAD_COMPUTE_DONE:
                 dev = active[rid].spec.device
                 if self.run_queue is not None:
                     started = self._run_queues[dev].complete(
@@ -1341,6 +1353,16 @@ class ServingCluster:
                 else:
                     self._computing[dev].discard(("kvreload", rid))
                 reload_leg_done(rid)
+        wall_s = time.perf_counter() - t_wall0
+        n_events = events.n_popped + n_link_events
+        SIM_STATS.record(n_events, wall_s)
+        self.last_sim_stats = {
+            "n_events": n_events,
+            "n_heap_events": events.n_popped,
+            "n_link_completions": n_link_events,
+            "wall_s": wall_s,
+            "events_per_s": n_events / wall_s if wall_s > 0 else None,
+        }
         assert not active and not queue, "cluster finished with stuck work"
         assert all(b.idle() for b in self._batchers.values()), \
             "cluster finished with undrained decode batches"

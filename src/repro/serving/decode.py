@@ -30,6 +30,7 @@ cluster owns actual start times (immediate or queued).
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Optional
 
 from repro.core.engine import decode_step_seconds
@@ -102,7 +103,7 @@ class DecodeBatcher:
         self.profile = profile
         self.dcfg = dcfg
         self.active: dict[int, _Member] = {}
-        self.waiting: list[_Member] = []
+        self.waiting: deque[_Member] = deque()
         self.inflight: Optional[Dispatch] = None
         # rids whose KV was evicted by the memory server: they keep their
         # batch slot (continuous-batching membership is the contract) but
@@ -126,7 +127,7 @@ class DecodeBatcher:
         """Estimated decode service left on this device (drives the run
         queue's SRPT ordering): steps to drain the longest member at the
         current batch composition's step cost."""
-        members = list(self.active.values()) + self.waiting
+        members = [*self.active.values(), *self.waiting]
         if not members:
             return 0.0
         steps_left = max(m.remaining for m in members)
@@ -178,9 +179,8 @@ class DecodeBatcher:
         here (membership is frozen for the dispatch)."""
         if self.inflight is not None or not self.active:
             return None
-        live = sorted((m for m in self.active.values()
-                       if m.rid not in self.suspended),
-                      key=lambda m: m.rid)
+        live = [self.active[r] for r in sorted(self.active)
+                if r not in self.suspended]
         if not live:
             return None               # every slot-holder awaits a reload
         offs: dict[int, list] = {m.rid: [] for m in live}
@@ -203,9 +203,9 @@ class DecodeBatcher:
         d = Dispatch(seq=self._seq, duration_s=t,
                      token_offsets={r: tuple(v) for r, v in offs.items()},
                      busy_share=busy,
-                     finished=tuple(sorted(
-                         r for r in offs
-                         if self.active[r].remaining == 0)),
+                     # offs iterates in rid order (live is rid-sorted)
+                     finished=tuple(r for r in offs
+                                    if self.active[r].remaining == 0),
                      batch_size=len(offs))
         self._seq += 1
         self.busy_s += t
@@ -222,6 +222,6 @@ class DecodeBatcher:
         for rid in d.finished:
             del self.active[rid]
         while self.waiting and len(self.active) < self.dcfg.max_batch:
-            m = self.waiting.pop(0)
+            m = self.waiting.popleft()
             self.active[m.rid] = m
         return d

@@ -20,6 +20,21 @@ Two families:
   shared by *all* APs) is three.  A single-stage topology is exactly
   PR 1's ``SharedLinkArbiter`` (which is now a subclass).
 
+  :class:`LinkTopology` is the **vectorized event core**: flow state
+  lives in struct-of-arrays (remaining bytes, path-group id, telemetry
+  accumulators are dense numpy rows), flows are bucketed by their path
+  tuple into *path groups* — every flow in a group crosses the same
+  stages, so it drains at the same rate — and ``advance()`` integrates
+  the whole fleet with one delivered-integral per *group* (one
+  ``at_many`` per stage) instead of one per flow.  ``next_completion()``
+  searches one candidate per group (the min-remaining flow provably
+  finishes first within its group) and caches the result between
+  active-set changes.  :class:`ScalarLinkTopology` preserves the
+  per-flow dict/loop reference implementation; both share the exact
+  same integration and bisection helpers, so at any N the two cores are
+  arithmetically in lockstep (the parity suite drives them side by
+  side).
+
 - :class:`DeviceRunQueue` — a *slotted* server: compute jobs occupy one
   of ``capacity`` service slots for a fixed duration; excess jobs wait in
   an explicit queue under a FIFO, weighted-fair (WFQ), or deadline-floored
@@ -70,8 +85,102 @@ class LinkStage:
         return eta / n
 
 
+# Completion search bounds shared by both topology cores: the doubling
+# phase gives up (LinkStarvedError) past _MAX_HORIZON_S of sim time, and
+# the bisection early-exits once the bracket is tighter than
+# _BISECT_TOL_S (sub-nanosecond sim time — far below any event spacing
+# the cluster produces, and the resolution the rtol<=1e-9 parity
+# contract is stated against).
+_MAX_HORIZON_S = 1e5
+_BISECT_TOL_S = 1e-9
+_BISECT_MAX_ITERS = 64
+
+
+def _delivered_on(sts: list, t0: float, t1: float,
+                  at_cache: Optional[dict] = None) -> float:
+    """Bytes a flow crossing stages `sts` drains over [t0, t1] with the
+    *current* active sets. Exact: per-stage rates are constant within
+    each trace cell, so the min-rate is integrated cell by cell; beyond
+    the last stage grid every stage extrapolates at a constant rate, so
+    the tail is integrated analytically (never enumerated — a starved
+    link searched out to the 1e5 s horizon must stay cheap).
+
+    ``at_cache`` memoizes per-stage ``at_many`` rows within one caller
+    pass (keyed by integrator identity and the clipped upper bound —
+    ``t0`` and ``dt`` are fixed within a pass, so the cell bounds, and
+    hence the row, are fully determined). Reusing the row is bitwise
+    neutral: it is the identical array the stage would recompute.
+    """
+    if len(sts) == 1:
+        return sts[0].bw.bytes_between(t0, t1) * sts[0].fraction()
+    fr = np.array([s.fraction() for s in sts])
+    dt = sts[0].bw.dt
+    t_gmax = max(s.bw.grid_end_s for s in sts)
+    total = 0.0
+    if t1 > t_gmax:
+        tail_span = t1 - max(t0, t_gmax)
+        total += tail_span * min(s.bw.tail_bw * f
+                                 for s, f in zip(sts, fr))
+        t1 = max(t0, t_gmax)
+    if t1 > t0:
+        k0, k1 = int(np.floor(t0 / dt)), int(np.ceil(t1 / dt))
+        bounds = None
+        rows = []
+        for s in sts:
+            ck = (id(s.bw), t1) if at_cache is not None else None
+            row = at_cache.get(ck) if ck is not None else None
+            if row is None:
+                if bounds is None:
+                    bounds = np.unique(np.concatenate(
+                        [[t0, t1], np.arange(k0 + 1, k1) * dt]))
+                    bounds = bounds[(bounds >= t0) & (bounds <= t1)]
+                row = s.bw.at_many(bounds)
+                if ck is not None:
+                    at_cache[ck] = row
+            rows.append(row)
+        per_stage = np.stack(rows)                              # (S, B)
+        deliv = np.diff(per_stage, axis=1) * fr[:, None]        # (S, B-1)
+        total += float(np.min(deliv, axis=0).sum())
+    return total
+
+
+def _finish_on(sts: list, t0: float, rem: float, names: tuple) -> float:
+    """Finish time of a `rem`-byte demand crossing stages `sts` from
+    `t0`, under the current active sets.
+
+    Single-stage paths defer to the integrator's closed-form search;
+    multi-stage paths bracket the root by doubling (each delivered
+    integral evaluated once — the starvation check reuses the loop's
+    last value instead of re-integrating) and then bisect with an
+    early exit once the bracket is tighter than ``_BISECT_TOL_S``.
+    """
+    if rem <= 0:
+        return t0
+    if len(sts) == 1:
+        return sts[0].bw.finish_time(t0, rem / sts[0].fraction())
+    lo, hi = t0, t0 + 1e-3
+    got = _delivered_on(sts, t0, hi)
+    while got < rem and hi - t0 <= _MAX_HORIZON_S:
+        hi = t0 + (hi - t0) * 2
+        got = _delivered_on(sts, t0, hi)
+    if got < rem:
+        raise LinkStarvedError(
+            f"link starved on path {tuple(names)}: {rem:.0f} B not "
+            f"deliverable within {_MAX_HORIZON_S:.0f}s of t={t0:.3f}")
+    for _ in range(_BISECT_MAX_ITERS):
+        if hi - lo <= _BISECT_TOL_S:
+            break
+        mid = 0.5 * (lo + hi)
+        if _delivered_on(sts, t0, mid) < rem:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
 class LinkTopology:
-    """Composable multi-stage link server (fluid-flow approximation).
+    """Composable multi-stage link server (fluid-flow approximation),
+    vectorized over flows.
 
     Every flow carries a byte demand along a fixed ``path`` of stages;
     within an interval where the active sets are constant the flow drains
@@ -83,17 +192,338 @@ class LinkTopology:
     arbiter: same cumulative-trace integral, same fair share, same
     completion search.  Per-flow share telemetry on the **last** stage of
     the path (the shared uplink by convention) is accumulated for fleet
-    reporting (:meth:`mean_share`).
+    reporting (:meth:`mean_share`); pass ``telemetry=False`` to skip all
+    share accumulation (``mean_share`` then reports 1.0 and
+    :meth:`stage_shares` ``{}``) when the driver never reads it.
+
+    **Struct-of-arrays layout.** Flow state lives in dense row-indexed
+    numpy arrays (``_rem_a`` remaining bytes, ``_gid_a`` path-group id,
+    ``_share_a`` / ``_active_a`` / ``_stage_a`` telemetry accumulators);
+    ``complete()`` keeps rows dense by swapping the last row in.  Flows
+    are bucketed into *path groups* by their path tuple: every flow in a
+    group crosses the same stages with the same fractions, so all of
+    them drain at the identical rate.  ``advance()`` therefore evaluates
+    one delivered integral per live group (memoizing ``at_many`` rows
+    across groups that share cell bounds — one ``at_many`` per *stage*
+    when traces share a horizon) and applies it to all member rows in
+    one vectorized pass.  ``next_completion()`` generalizes the
+    arbiter-era fast path to every group: within a group the
+    min-remaining flow provably finishes first (equal drain rates), so
+    only one candidate per group is bisected; the result is cached and
+    reused until the active set changes (``add`` / ``complete``) — the
+    earliest absolute finish time is invariant under ``advance`` within
+    a membership epoch.
+
+    The dict-shaped views ``_rem`` / ``_path`` and the telemetry getters
+    materialize lazily from the arrays, so the scalar-era API (and the
+    scalar reference core, :class:`ScalarLinkTopology`) is preserved
+    verbatim.
     """
 
     def __init__(self, stages: dict[str, LinkStage],
-                 default_path: Optional[Sequence[str]] = None):
+                 default_path: Optional[Sequence[str]] = None,
+                 *, telemetry: bool = True):
         assert stages, "topology needs at least one stage"
         dts = {st.bw.dt for st in stages.values()}
         assert len(dts) == 1, f"stage traces must share one dt, got {dts}"
         self.stages = stages
         self.default_path = tuple(default_path) if default_path \
             else (next(iter(stages)),)
+        self.telemetry = telemetry
+        self.t = 0.0
+        # struct-of-arrays flow state (dense rows; swap-with-last on
+        # complete)
+        self._n = 0
+        self._keys: list = []                # row -> flow key
+        self._row: dict = {}                 # flow key -> row
+        cap = 16
+        self._plen_max = max(1, len(self.default_path))
+        self._rem_a = np.zeros(cap)
+        self._gid_a = np.zeros(cap, dtype=np.intp)
+        self._share_a = np.zeros(cap)        # last-stage share * time
+        self._active_a = np.zeros(cap)       # active time
+        self._stage_a = np.zeros((cap, self._plen_max))  # per path position
+        self._adv_a = np.zeros(cap, dtype=bool)  # row saw >=1 advance
+        # path groups (persist for the topology's lifetime)
+        self._gid_of: dict = {}              # path tuple -> gid
+        self._gpath: list = []               # gid -> path tuple
+        self._gstages: list = []             # gid -> [LinkStage, ...]
+        self._gcount: list = []              # gid -> live flow count
+        # telemetry of completed flows (never cleared — the scalar-era
+        # contract; re-adding a key seeds its rows from here so repeated
+        # activations keep one continuous accumulation)
+        self._done_tele: dict = {}           # key -> (share, active, {stage})
+        self._seeded: dict = {}              # key -> stage names seeded
+        self._off: dict = {}                 # key -> off-path carryover
+        # next_completion cache, valid between active-set changes
+        self._nc: Optional[tuple] = None
+        self._nc_valid = False
+
+    # ---- dict-shaped views (scalar-era API; tests and tools use them) ----
+    @property
+    def _rem(self) -> dict:
+        """Flow key -> remaining bytes, materialized from the array."""
+        return {k: float(self._rem_a[self._row[k]]) for k in self._keys}
+
+    @property
+    def _path(self) -> dict:
+        """Flow key -> path tuple, materialized from the group registry."""
+        return {k: self._gpath[int(self._gid_a[self._row[k]])]
+                for k in self._keys}
+
+    # ---- membership ----
+    def n_active(self) -> int:
+        return self._n
+
+    def _group_of(self, p: tuple) -> int:
+        gid = self._gid_of.get(p)
+        if gid is None:
+            gid = len(self._gpath)
+            self._gid_of[p] = gid
+            self._gpath.append(p)
+            self._gstages.append([self.stages[s] for s in p])
+            self._gcount.append(0)
+            if len(p) > self._plen_max:
+                self._plen_max = len(p)
+                ns = np.zeros((self._stage_a.shape[0], self._plen_max))
+                ns[:, :self._stage_a.shape[1]] = self._stage_a
+                self._stage_a = ns
+        return gid
+
+    def _grow_rows(self) -> None:
+        cap = 2 * len(self._rem_a)
+
+        def g(a):
+            new = np.zeros(cap, dtype=a.dtype)
+            new[:len(a)] = a
+            return new
+
+        self._rem_a = g(self._rem_a)
+        self._gid_a = g(self._gid_a)
+        self._share_a = g(self._share_a)
+        self._active_a = g(self._active_a)
+        self._adv_a = g(self._adv_a)
+        ns = np.zeros((cap, self._stage_a.shape[1]))
+        ns[:self._stage_a.shape[0]] = self._stage_a
+        self._stage_a = ns
+
+    def add(self, key, nbytes: float,
+            path: Optional[Sequence[str]] = None) -> None:
+        assert key not in self._row, f"flow {key} already active"
+        p = tuple(path) if path else self.default_path
+        for s in p:
+            self.stages[s].active.add(key)
+        gid = self._group_of(p)
+        self._gcount[gid] += 1
+        row = self._n
+        if row == len(self._rem_a):
+            self._grow_rows()
+        self._keys.append(key)
+        self._row[key] = row
+        self._rem_a[row] = float(nbytes)
+        self._gid_a[row] = gid
+        self._share_a[row] = 0.0
+        self._active_a[row] = 0.0
+        self._stage_a[row, :] = 0.0
+        self._adv_a[row] = False
+        if self.telemetry:
+            # a re-added key (reload restreams, per-chunk stream flows)
+            # continues its accumulation exactly where it left off: seed
+            # the fresh rows with the folded totals so every later `+=`
+            # extends the same running sums the scalar dicts would hold
+            base = self._done_tele.pop(key, None)
+            if base is not None:
+                share0, active0, by0 = base
+                self._share_a[row] = share0
+                self._active_a[row] = active0
+                seeded, off = [], {}
+                for name, v in by0.items():
+                    if name in p:
+                        self._stage_a[row, p.index(name)] = v
+                        seeded.append(name)
+                    else:
+                        off[name] = v
+                if seeded:
+                    self._seeded[key] = tuple(seeded)
+                if off:
+                    self._off[key] = off
+        self._n += 1
+        self._nc_valid = False
+
+    def _gather_tele(self, key, row: int) -> tuple:
+        """(share_time, active_time, {stage: share_time}) for a live row,
+        including any carryover from earlier activations of the key."""
+        p = self._gpath[int(self._gid_a[row])]
+        by = dict(self._off.get(key, {}))
+        seeded = self._seeded.get(key, ())
+        adv = bool(self._adv_a[row])
+        for i, name in enumerate(p):
+            # a stage appears once the flow lived through an advance (the
+            # scalar core's setdefault point) or was seeded from a prior
+            # activation; zero-span activations contribute no entries
+            if adv or name in seeded:
+                by[name] = float(self._stage_a[row, i])
+        return float(self._share_a[row]), float(self._active_a[row]), by
+
+    def complete(self, key) -> None:
+        row = self._row.pop(key)
+        gid = int(self._gid_a[row])
+        for s in self._gpath[gid]:
+            self.stages[s].active.discard(key)
+        self._gcount[gid] -= 1
+        if self.telemetry:
+            self._done_tele[key] = self._gather_tele(key, row)
+            self._seeded.pop(key, None)
+            self._off.pop(key, None)
+        last = self._n - 1
+        if row != last:                      # keep rows dense
+            mkey = self._keys[last]
+            self._keys[row] = mkey
+            self._row[mkey] = row
+            self._rem_a[row] = self._rem_a[last]
+            self._gid_a[row] = self._gid_a[last]
+            self._share_a[row] = self._share_a[last]
+            self._active_a[row] = self._active_a[last]
+            self._stage_a[row, :] = self._stage_a[last, :]
+            self._adv_a[row] = self._adv_a[last]
+        self._keys.pop()
+        self._n = last
+        self._nc_valid = False
+
+    # ---- integration ----
+    def _live_gids(self) -> list:
+        return [g for g, c in enumerate(self._gcount) if c > 0]
+
+    def advance(self, t: float) -> None:
+        """Integrate all flows over [self.t, t] (constant active sets):
+        one delivered integral per path group, applied to every member
+        row in a single vectorized pass."""
+        if t <= self.t:
+            return
+        span = t - self.t
+        n = self._n
+        if n:
+            live = self._live_gids()
+            got = np.zeros(len(self._gcount))
+            at_cache: dict = {}
+            for g in live:
+                got[g] = _delivered_on(self._gstages[g], self.t, t,
+                                       at_cache)
+            gid = self._gid_a[:n]
+            self._rem_a[:n] = np.maximum(self._rem_a[:n] - got[gid], 0.0)
+            if self.telemetry:
+                frac = {name: st.fraction()
+                        for name, st in self.stages.items()}
+                lastf = np.zeros(len(self._gcount))
+                gfrac = np.zeros((len(self._gcount), self._plen_max))
+                for g in live:
+                    p = self._gpath[g]
+                    lastf[g] = frac[p[-1]]
+                    for i, s in enumerate(p):
+                        gfrac[g, i] = frac[s]
+                self._share_a[:n] += lastf[gid] * span
+                self._active_a[:n] += span
+                self._stage_a[:n, :] += gfrac[gid] * span
+                self._adv_a[:n] = True
+        self.t = t
+
+    # ---- completion search ----
+    def next_completion(self) -> Optional[tuple]:
+        """(t_done, key) of the earliest flow to finish if the active sets
+        stay fixed.
+
+        One bisection per *group*: all flows in a group drain at the same
+        rate, so the min-remaining flow (ties to the smallest key, the
+        scalar core's order) finishes first within its group — the
+        arbiter-era single-stage fast path, generalized.  The result is
+        cached until the next ``add``/``complete``: within a membership
+        epoch the absolute finish times are invariant under ``advance``
+        (a flow's remaining bytes at any interior time equal exactly the
+        integral still to run), so the cache is a pure memo."""
+        if self._n == 0:
+            return None
+        if self._nc_valid:
+            return self._nc
+        n = self._n
+        rem = self._rem_a[:n]
+        gid = self._gid_a[:n]
+        live = self._live_gids()
+        best = None
+        if len(live) == 1:
+            cand_iter = [(live[0], rem.min(), None)]
+        else:
+            minrem = np.full(len(self._gcount), np.inf)
+            np.minimum.at(minrem, gid, rem)
+            cand_iter = [(g, minrem[g], gid) for g in live]
+        for g, m, gsel in cand_iter:
+            tied = np.nonzero(rem == m)[0] if gsel is None \
+                else np.nonzero((gsel == g) & (rem == m))[0]
+            key = self._keys[tied[0]] if len(tied) == 1 \
+                else min(self._keys[i] for i in tied)
+            t_fin = _finish_on(self._gstages[g], self.t, float(m),
+                               self._gpath[g])
+            cand = (t_fin, key)
+            if best is None or cand < best:
+                best = cand
+        self._nc = best
+        self._nc_valid = True
+        return best
+
+    # ---- telemetry ----
+    def mean_share(self, key) -> float:
+        """Time-averaged fraction of the flow's last-stage (uplink)
+        capacity it received while active; 1.0 if it never waited on a
+        shared interval (or with ``telemetry=False``)."""
+        if not self.telemetry:
+            return 1.0
+        row = self._row.get(key)
+        if row is not None:
+            share, at = float(self._share_a[row]), float(self._active_a[row])
+        else:
+            share, at, _ = self._done_tele.get(key, (0.0, 0.0, {}))
+        if at <= 0:
+            return 1.0
+        return share / at
+
+    def stage_shares(self, key) -> dict[str, float]:
+        """Time-averaged fraction the flow received on *every* stage of
+        its path while active, keyed by stage name ({} if it never ran a
+        shared interval, or with ``telemetry=False``). The minimum entry
+        is the flow's observed bottleneck share — the signal the
+        predictor refresh trains on."""
+        if not self.telemetry:
+            return {}
+        row = self._row.get(key)
+        if row is not None:
+            _, at, by = self._gather_tele(key, row)
+        else:
+            _, at, by = self._done_tele.get(key, (0.0, 0.0, {}))
+        if at <= 0:
+            return {}
+        return {s: v / at for s, v in by.items()}
+
+
+class ScalarLinkTopology:
+    """The per-flow dict/loop reference implementation of
+    :class:`LinkTopology` (the pre-vectorization core): ``advance()``
+    integrates one delivered integral per *flow* and
+    ``next_completion()`` searches every flow.  Kept as the parity
+    oracle — it shares :func:`_delivered_on` / :func:`_finish_on` (and
+    the completion cache) with the vectorized core, so the two are
+    arithmetically in lockstep and the property suite can drive them
+    side by side on identical traces.  API-identical; select it in the
+    cluster with ``ServingCluster(link_core="scalar")``."""
+
+    def __init__(self, stages: dict[str, LinkStage],
+                 default_path: Optional[Sequence[str]] = None,
+                 *, telemetry: bool = True):
+        assert stages, "topology needs at least one stage"
+        dts = {st.bw.dt for st in stages.values()}
+        assert len(dts) == 1, f"stage traces must share one dt, got {dts}"
+        self.stages = stages
+        self.default_path = tuple(default_path) if default_path \
+            else (next(iter(stages)),)
+        self.telemetry = telemetry
         self.t = 0.0
         self._rem: dict = {}                 # flow key -> bytes left
         self._path: dict = {}                # flow key -> tuple[str, ...]
@@ -101,6 +531,8 @@ class LinkTopology:
         self._share_time: dict = {}
         self._active_time: dict = {}
         self._stage_share_time: dict = {}    # key -> {stage: share * dt sum}
+        self._nc: Optional[tuple] = None
+        self._nc_valid = False
 
     # ---- membership ----
     def n_active(self) -> int:
@@ -114,42 +546,17 @@ class LinkTopology:
             self.stages[s].active.add(key)
         self._rem[key] = float(nbytes)
         self._path[key] = p
+        self._nc_valid = False
 
     def complete(self, key) -> None:
         for s in self._path.pop(key):
             self.stages[s].active.discard(key)
         del self._rem[key]
+        self._nc_valid = False
 
     # ---- integration ----
     def _delivered(self, path: tuple, t0: float, t1: float) -> float:
-        """Bytes a flow on `path` drains over [t0, t1] with the *current*
-        active sets. Exact: per-stage rates are constant within each trace
-        cell, so the min-rate is integrated cell by cell; beyond the last
-        stage grid every stage extrapolates at a constant rate, so the
-        tail is integrated analytically (never enumerated — a starved
-        link searched out to the 1e5 s horizon must stay cheap)."""
-        sts = [self.stages[s] for s in path]
-        if len(sts) == 1:
-            return sts[0].bw.bytes_between(t0, t1) * sts[0].fraction()
-        fr = np.array([s.fraction() for s in sts])
-        dt = sts[0].bw.dt
-        t_gmax = max(s.bw.grid_end_s for s in sts)
-        total = 0.0
-        if t1 > t_gmax:
-            tail_span = t1 - max(t0, t_gmax)
-            total += tail_span * min(s.bw.tail_bw * f
-                                     for s, f in zip(sts, fr))
-            t1 = max(t0, t_gmax)
-        if t1 > t0:
-            k0, k1 = int(np.floor(t0 / dt)), int(np.ceil(t1 / dt))
-            bounds = np.unique(np.concatenate(
-                [[t0, t1], np.arange(k0 + 1, k1) * dt]))
-            bounds = bounds[(bounds >= t0) & (bounds <= t1)]
-            per_stage = np.stack([s.bw.at_many(bounds)
-                                  for s in sts])                    # (S, B)
-            deliv = np.diff(per_stage, axis=1) * fr[:, None]        # (S, B-1)
-            total += float(np.min(deliv, axis=0).sum())
-        return total
+        return _delivered_on([self.stages[s] for s in path], t0, t1)
 
     def advance(self, t: float) -> None:
         """Integrate all flows over [self.t, t] (constant active sets)."""
@@ -159,6 +566,8 @@ class LinkTopology:
         for key in self._rem:
             got = self._delivered(self._path[key], self.t, t)
             self._rem[key] = max(self._rem[key] - got, 0.0)
+            if not self.telemetry:
+                continue
             last = self.stages[self._path[key][-1]]
             self._share_time[key] = self._share_time.get(key, 0.0) \
                 + last.fraction() * span
@@ -172,51 +581,36 @@ class LinkTopology:
     # ---- completion search ----
     def _finish(self, key) -> float:
         rem, path = self._rem[key], self._path[key]
-        if rem <= 0:
-            return self.t
-        sts = [self.stages[s] for s in path]
-        if len(sts) == 1:
-            return sts[0].bw.finish_time(self.t, rem / sts[0].fraction())
-        # multi-stage: bisect on the exact piecewise-linear integral
-        max_horizon_s = 1e5
-        lo, hi = self.t, self.t + 1e-3
-        while self._delivered(path, self.t, hi) < rem:
-            hi = self.t + (hi - self.t) * 2
-            if hi - self.t > max_horizon_s:
-                break
-        if self._delivered(path, self.t, hi) < rem:
-            raise LinkStarvedError(
-                f"link starved on path {path}: {rem:.0f} B not "
-                f"deliverable within {max_horizon_s:.0f}s of t={self.t:.3f}")
-        for _ in range(60):
-            mid = 0.5 * (lo + hi)
-            if self._delivered(path, self.t, mid) < rem:
-                lo = mid
-            else:
-                hi = mid
-        return hi
+        return _finish_on([self.stages[s] for s in path], self.t, rem,
+                          path)
 
     def next_completion(self) -> Optional[tuple]:
         """(t_done, key) of the earliest flow to finish if the active sets
-        stay fixed."""
+        stay fixed. Cached between active-set changes (finish times are
+        invariant under ``advance`` within a membership epoch)."""
         if not self._rem:
             return None
+        if self._nc_valid:
+            return self._nc
         paths = set(self._path.values())
         if len(paths) == 1 and len(next(iter(paths))) == 1:
             # all flows share one single-stage path -> equal shares, so
             # the min-remaining flow provably finishes first: one search
             # instead of one per flow (the arbiter-era fast path)
             key = min(self._rem, key=lambda k: (self._rem[k], k))
-            return self._finish(key), key
-        # keys must be mutually orderable (the cluster uses int rids)
-        best = min((self._finish(k), k) for k in self._rem)
+            best = (self._finish(key), key)
+        else:
+            # keys must be mutually orderable (the cluster uses int rids)
+            best = min((self._finish(k), k) for k in self._rem)
+        self._nc = best
+        self._nc_valid = True
         return best
 
     # ---- telemetry ----
     def mean_share(self, key) -> float:
         """Time-averaged fraction of the flow's last-stage (uplink)
         capacity it received while active; 1.0 if it never waited on a
-        shared interval."""
+        shared interval (or with ``telemetry=False``)."""
         at = self._active_time.get(key, 0.0)
         if at <= 0:
             return 1.0
@@ -225,8 +619,7 @@ class LinkTopology:
     def stage_shares(self, key) -> dict[str, float]:
         """Time-averaged fraction the flow received on *every* stage of
         its path while active, keyed by stage name ({} if it never ran a
-        shared interval). The minimum entry is the flow's observed
-        bottleneck share — the signal the predictor refresh trains on."""
+        shared interval, or with ``telemetry=False``)."""
         at = self._active_time.get(key, 0.0)
         if at <= 0:
             return {}
@@ -236,23 +629,30 @@ class LinkTopology:
 
 def single_link(integrator: BandwidthIntegrator,
                 link: Optional[SharedLinkModel] = None,
-                name: str = "uplink") -> LinkTopology:
-    """The degenerate one-stage topology (== PR 1 SharedLinkArbiter)."""
-    return LinkTopology({name: LinkStage(name, integrator, link)},
-                        default_path=(name,))
+                name: str = "uplink", *, cls: Optional[type] = None,
+                telemetry: bool = True) -> LinkTopology:
+    """The degenerate one-stage topology (== PR 1 SharedLinkArbiter).
+    ``cls`` selects the core (:class:`LinkTopology` by default,
+    :class:`ScalarLinkTopology` for the reference path)."""
+    cls = cls if cls is not None else LinkTopology
+    return cls({name: LinkStage(name, integrator, link)},
+               default_path=(name,), telemetry=telemetry)
 
 
 def nic_uplink_topology(nic_integrators: Sequence[BandwidthIntegrator],
                         uplink_integrator: BandwidthIntegrator,
                         uplink_link: Optional[SharedLinkModel] = None,
-                        nic_link: Optional[SharedLinkModel] = None
+                        nic_link: Optional[SharedLinkModel] = None,
+                        *, cls: Optional[type] = None,
+                        telemetry: bool = True
                         ) -> LinkTopology:
     """Two-stage tree: per-device NIC stages feeding one shared AP
     uplink. Device d's flows take path ("nic{d}", "uplink"). The
     degenerate (egress-free, single-AP) case of :func:`tree_topology`."""
     return tree_topology(nic_integrators, [uplink_integrator],
                          [0] * len(nic_integrators),
-                         uplink_link=uplink_link, nic_link=nic_link)
+                         uplink_link=uplink_link, nic_link=nic_link,
+                         cls=cls, telemetry=telemetry)
 
 
 def tree_topology(nic_integrators: Optional[
@@ -262,7 +662,9 @@ def tree_topology(nic_integrators: Optional[
                   egress_integrator: Optional[BandwidthIntegrator] = None,
                   *, uplink_link: Optional[SharedLinkModel] = None,
                   nic_link: Optional[SharedLinkModel] = None,
-                  egress_link: Optional[SharedLinkModel] = None
+                  egress_link: Optional[SharedLinkModel] = None,
+                  cls: Optional[type] = None,
+                  telemetry: bool = True
                   ) -> LinkTopology:
     """Full cloud-egress tree: per-device NIC stages feeding per-AP
     uplink stages feeding one cloud-egress stage shared by *all* APs.
@@ -276,6 +678,7 @@ def tree_topology(nic_integrators: Optional[
     *identical* to :func:`nic_uplink_topology`; an unconstrained egress
     stage (capacity far above every per-flow share) leaves the two-stage
     trace bit-for-bit unchanged, since the bottleneck min ignores it.
+    ``cls`` selects the topology core (vectorized default).
     """
     n_aps = len(uplink_integrators)
     assert n_aps >= 1, "tree needs at least one AP uplink"
@@ -293,8 +696,9 @@ def tree_topology(nic_integrators: Optional[
     if egress_integrator is not None:
         stages["egress"] = LinkStage("egress", egress_integrator,
                                      egress_link)
-    return LinkTopology(stages,
-                        default_path=(uplink_stage_name(0, n_aps),))
+    cls = cls if cls is not None else LinkTopology
+    return cls(stages, default_path=(uplink_stage_name(0, n_aps),),
+               telemetry=telemetry)
 
 
 def uplink_stage_name(ap: int, n_aps: int) -> str:

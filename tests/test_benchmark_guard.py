@@ -112,6 +112,31 @@ def test_memory_bench_registered():
     assert "kv_memory" in _registered_save_names()
 
 
+def test_simcore_bench_registered():
+    """The simulator-throughput bench is wired into the runner and its
+    results file validates against the registry."""
+    assert ("simcore", "benchmarks.bench_simcore") in BENCHES
+    assert "simcore" in _registered_save_names()
+
+
+def test_profile_stamp_routes_through_save(tmp_path, monkeypatch):
+    """--profile adds a ``_profile`` block (bench wall-clock + simulator
+    event counters) to saved payloads, and leaves unprofiled saves
+    untouched."""
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    monkeypatch.setattr(common, "QUICK_DIR", str(tmp_path / "quick"))
+    plain = common.save("x", {"rows": [1]})
+    with open(plain) as f:
+        assert "_profile" not in json.load(f)
+    monkeypatch.setattr(common, "PROFILE", True)
+    common.begin_bench()
+    prof = common.save("x", {"rows": [1]})
+    with open(prof) as f:
+        block = json.load(f)["_profile"]
+    assert block["bench_wall_s"] >= 0
+    assert "sim_events" in block and "sim_events_per_s" in block
+
+
 @pytest.mark.parametrize("path", RESULTS,
                          ids=[os.path.basename(p) for p in RESULTS])
 def test_checked_in_result_validates_against_registry(path):

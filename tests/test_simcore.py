@@ -1,0 +1,171 @@
+"""Typed event core (`serving/simcore`) and vectorized-vs-scalar fleet
+parity: the EventQueue must reproduce bare-heapq semantics exactly
+(including batched insertion), SimStats must account run throughput, and
+`ServingCluster(link_core=...)` must produce *bit-identical* fleet
+reports on either core across disciplines × memory pressure."""
+import heapq
+import random
+
+import pytest
+
+from repro.configs import SparKVConfig, get_config
+from repro.core.costs import MemoryModel, RunQueueModel
+from repro.serving.cluster import ServingCluster
+from repro.serving.simcore import STATS, Event, EventKind, EventQueue, SimStats
+from repro.serving.traffic import poisson_trace
+
+CFG = get_config("sparkv-qwen3-4b")
+SP = SparKVConfig(scheduler_mode="engine")
+
+
+# ---------------------------------------------------------------------------
+# EventQueue semantics
+# ---------------------------------------------------------------------------
+
+def test_event_queue_pop_order_matches_bare_heapq():
+    """Same (t, seq) records, pushed one by one: EventQueue pops in
+    exactly the order a bare tuple heap would (ties broken by push
+    order), with unorderable payloads never compared."""
+    rng = random.Random(3)
+    times = [round(rng.uniform(0, 5), 2) for _ in range(200)]
+    q = EventQueue()
+    ref = []
+    for i, t in enumerate(times):
+        q.push(t, EventKind.ARRIVAL, i, payload={"rid": i})  # dict: unorderable
+        heapq.heappush(ref, (t, i))
+    got = []
+    while q:
+        ev = q.pop()
+        got.append((ev.t, ev.seq))
+        assert ev.payload == {"rid": ev.rid}
+    assert got == [heapq.heappop(ref) for _ in range(len(times))]
+    assert q.n_pushed == q.n_popped == len(times)
+
+
+def test_push_many_batched_equals_sequential_pushes():
+    """push_many's heapify fast path (batch > heap) and its fallback
+    must both pop identically to k sequential pushes — including ties,
+    which resolve by record order."""
+    rng = random.Random(11)
+    recs = [(round(rng.uniform(0, 3), 1), EventKind.COMPUTE_DONE, i, None)
+            for i in range(150)]
+    seq_q, bulk_q, mixed_q = EventQueue(), EventQueue(), EventQueue()
+    for t, k, rid, p in recs:
+        seq_q.push(t, k, rid, p)
+    bulk_q.push_many(recs)                       # heapify path (empty heap)
+    mixed_q.push_many(recs[:100])                # then a small batch:
+    mixed_q.push_many(recs[100:])                # push-loop fallback path
+    orders = []
+    for q in (seq_q, bulk_q, mixed_q):
+        order = []
+        while q:
+            ev = q.pop()
+            order.append((ev.t, ev.seq, ev.kind, ev.rid))
+        orders.append(order)
+    assert orders[0] == orders[1] == orders[2]
+
+
+def test_peek_t_and_empty_behaviour():
+    q = EventQueue()
+    assert q.peek_t() == float("inf")
+    assert not q and len(q) == 0
+    q.push(2.0, EventKind.DECODE_DONE, 0)
+    q.push(1.0, EventKind.ARRIVAL, 1)
+    assert q.peek_t() == 1.0                     # peek does not pop
+    assert q.peek_t() == 1.0 and len(q) == 2
+    ev = q.pop()
+    assert (ev.t, ev.kind, ev.rid) == (1.0, EventKind.ARRIVAL, 1)
+    assert isinstance(ev, Event)
+
+
+def test_event_ordering_never_compares_payloads():
+    """Identical timestamps with unorderable payloads: seq breaks the
+    tie before comparison ever reaches kind/payload."""
+    q = EventQueue()
+    q.push(1.0, EventKind.ARRIVAL, 0, payload=object())
+    q.push(1.0, EventKind.ARRIVAL, 1, payload=object())
+    assert q.pop().rid == 0 and q.pop().rid == 1
+
+
+def test_sim_stats_accumulates_and_resets():
+    s = SimStats()
+    assert s.events_per_s() is None
+    s.record(100, 0.5)
+    s.record(50, 0.5)
+    assert s.n_events == 150 and s.n_runs == 2
+    assert s.events_per_s() == pytest.approx(150.0)
+    snap = s.snapshot()
+    assert snap["sim_events"] == 150 and snap["sim_runs"] == 2
+    s.reset()
+    assert s.n_events == 0 and s.events_per_s() is None
+
+
+# ---------------------------------------------------------------------------
+# fleet bit-parity: vectorized vs scalar link core
+# ---------------------------------------------------------------------------
+
+def _fleet_fingerprint(report):
+    """Every per-request observable that the link server can influence,
+    exactly as produced (no rounding)."""
+    return [(r.spec.arrival_s, r.ttft_s, r.ttlt_s, r.energy_j,
+             r.uplink_share,
+             r.compute_wait_s, r.bytes_streamed, r.policy,
+             tuple(sorted(r.stage_shares.items())))
+            for r in report.records]
+
+
+@pytest.mark.parametrize("discipline", ["fifo", "wfq", "srpt"])
+@pytest.mark.parametrize("mem_cap", [None, 2e8])
+def test_fleet_bit_parity_across_cores(discipline, mem_cap):
+    """Fixed-seed fleets at N ≤ 32: the vectorized core's run report is
+    bit-identical to the scalar core's, across run-queue disciplines and
+    with/without KV memory pressure (reload flows re-add keys, the
+    telemetry-continuation path)."""
+    specs = poisson_trace(16, 2.0, max_context=2048, seed=5)
+    reports = {}
+    for core in ("vectorized", "scalar"):
+        cluster = ServingCluster(
+            CFG, SP, "jetson-orin", "campus-wifi", n_devices=2,
+            run_queue=RunQueueModel(2, discipline),
+            memory=(MemoryModel(capacity_bytes=mem_cap)
+                    if mem_cap else None),
+            max_concurrency=8, link_core=core)
+        reports[core] = cluster.run(specs)
+        assert cluster.last_sim_stats["n_events"] > 0
+        assert cluster.last_sim_stats["wall_s"] >= 0
+    assert _fleet_fingerprint(reports["vectorized"]) == \
+        _fleet_fingerprint(reports["scalar"])
+
+
+def test_link_core_param_validated():
+    with pytest.raises(AssertionError):
+        ServingCluster(CFG, SP, link_core="simd")
+
+
+def test_cluster_records_sim_stats_globally():
+    """Every run contributes its event count to the process-wide STATS
+    accumulator that --profile snapshots."""
+    specs = poisson_trace(6, 2.0, max_context=2048, seed=9)
+    before = STATS.n_events, STATS.n_runs
+    cluster = ServingCluster(CFG, SP, "jetson-orin", "campus-wifi",
+                             max_concurrency=4)
+    cluster.run(specs)
+    assert STATS.n_runs == before[1] + 1
+    assert STATS.n_events == before[0] + cluster.last_sim_stats["n_events"]
+    st = cluster.last_sim_stats
+    assert st["n_heap_events"] + st["n_link_completions"] == st["n_events"]
+
+
+def test_link_telemetry_off_preserves_latency_results():
+    """`link_telemetry=False` must leave every latency/energy observable
+    bit-identical and only blank the share telemetry (mean_share -> 1.0
+    convention, stage_shares -> {})."""
+    specs = poisson_trace(10, 2.0, max_context=2048, seed=7)
+    on = ServingCluster(CFG, SP, "jetson-orin", "campus-wifi",
+                        max_concurrency=8).run(specs)
+    off = ServingCluster(CFG, SP, "jetson-orin", "campus-wifi",
+                         max_concurrency=8, link_telemetry=False).run(specs)
+    for a, b in zip(on.records, off.records):
+        assert (a.ttft_s, a.ttlt_s, a.energy_j, a.bytes_streamed) == \
+            (b.ttft_s, b.ttlt_s, b.energy_j, b.bytes_streamed)
+        assert b.stage_shares == {}
