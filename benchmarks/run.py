@@ -31,6 +31,7 @@ BENCHES = [
     ("decode", "benchmarks.bench_decode_goodput"),
     ("topology", "benchmarks.bench_topology_tree"),
     ("memory", "benchmarks.bench_kv_memory"),
+    ("reuse", "benchmarks.bench_reuse"),
     ("fig15", "benchmarks.bench_fig15_context_scaling"),
     ("fig16", "benchmarks.bench_fig16_breakdown"),
     ("quality", "benchmarks.bench_quality_validation"),

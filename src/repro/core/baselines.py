@@ -25,8 +25,9 @@ import numpy as np
 from repro.configs.base import SparKVConfig
 from repro.core.chunks import Chunk, ChunkGrid
 from repro.core.controller import RuntimeController
-from repro.core.costs import (GroundTruthLatency, NetworkProfile,
-                              PROFILES, t_stream)
+from repro.core.costs import (GroundTruthLatency, KVStoreModel,
+                              NetworkProfile, PROFILES, t_store_hit,
+                              t_stream)
 from repro.core.engine import BandwidthIntegrator, HybridEngine
 from repro.core.predictor import LatencyPredictor
 from repro.core import scheduler as sched
@@ -132,6 +133,18 @@ def _run_engine(cfg, grid, bytes_map, active_map, planner, schedule,
     return eng.run(schedule, context_len=context_len)
 
 
+@dataclasses.dataclass(frozen=True)
+class ChunkReuse:
+    """Resolved cross-request reuse for one request at admission: `local`
+    chunks are already resident on the device (prefix cache — near-free),
+    `store` chunks are cloud-store hits (stream the cached bitstream over
+    the egress-free leg, costed by :func:`repro.core.costs.t_store_hit`
+    under `model`). Disjoint sets; everything else is a miss."""
+    local: frozenset = frozenset()
+    store: frozenset = frozenset()
+    model: Optional[KVStoreModel] = None
+
+
 @dataclasses.dataclass
 class RequestPlan:
     """Everything the engine needs to execute one request under a given
@@ -151,13 +164,26 @@ class RequestPlan:
     controller: Optional[RuntimeController]
     quality_bits: int
     context_len: int
+    # cross-request reuse legs (empty = no reuse layer; defaults keep
+    # pre-reuse plans bit-identical)
+    reuse_local: frozenset = frozenset()
+    reuse_store: frozenset = frozenset()
+    store_model: Optional[KVStoreModel] = None
 
 
 def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
                 net: NetworkProfile, spcfg: SparKVConfig, *,
                 util: float = 0.0, adapt: bool = True,
-                slo_s: float = 2.0, kivi_bits: int = 3) -> RequestPlan:
-    """Build the schedule/controller for `policy` without executing it."""
+                slo_s: float = 2.0, kivi_bits: int = 3,
+                reuse: Optional[ChunkReuse] = None) -> RequestPlan:
+    """Build the schedule/controller for `policy` without executing it.
+
+    `reuse` (resolved hits from the serving layer's content-key lookup)
+    bends the planning costs before the scheduler runs: local prefix
+    hits cost ~nothing on the stream path (the greedy planner front-loads
+    them; the engine then skips them outright), store hits cost
+    ``t_store_hit`` instead of the origin ``t_stream``. The third leg
+    beside stream/compute."""
     if policy not in PIPELINES:
         raise KeyError(f"unknown policy {policy!r}; have {list(PIPELINES)}")
     grid, bmap, amap = _engine_grid(cfg, wl, spcfg)
@@ -177,6 +203,17 @@ def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
         bmap = {c: v * bits / spcfg.quant_bits for c, v in bmap.items()}
     planner = Planner.build(cfg, grid, bmap, amap, profile_name, net, spcfg,
                             util=util)
+    if reuse is not None and (reuse.local or reuse.store):
+        # bend the stream-side planning costs: a local prefix hit is
+        # near-free (schedule it first, the engine skips it), a store hit
+        # costs the cached-egress leg instead of the origin stream
+        profile = PROFILES[profile_name]
+        for i, c in enumerate(grid.chunks()):
+            if c in reuse.local:
+                planner.ts[i] = 1e-9   # ~free, nonzero: 1/ts priorities
+            elif c in reuse.store and reuse.model is not None:
+                planner.ts[i] = t_store_hit(bmap[c], net.mean_bw, profile,
+                                            reuse.model)
     controller = None
     if policy == "sparkv":
         schedule = sched.GreedyScheduler(
@@ -186,6 +223,8 @@ def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
             w_potential=spcfg.w_potential).run()
         if adapt:
             controller = RuntimeController(spcfg, net.mean_bw)
+            if reuse is not None and reuse.store:
+                controller.set_store_hits(reuse.store)
     elif policy == "strong_hybrid":
         schedule = sched.positional_hybrid(grid, planner.ts, planner.tc)
     elif policy == "local_prefill":
@@ -195,13 +234,20 @@ def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
     return RequestPlan(policy=policy, grid=grid, bytes_map=bmap,
                        active_map=amap, planner=planner, schedule=schedule,
                        controller=controller, quality_bits=bits,
-                       context_len=wl.context_len)
+                       context_len=wl.context_len,
+                       reuse_local=(reuse.local if reuse else frozenset()),
+                       reuse_store=(reuse.store if reuse else frozenset()),
+                       store_model=(reuse.model if reuse else None))
 
 
 def _mixed_quality(res, bits: int) -> float:
-    n = res.n_streamed + res.n_computed
+    # reused chunks carry streamed fidelity: the cached artifact was
+    # encoded at the same quantization level as a fresh stream
+    n_reused = getattr(res, "n_reused", 0)
+    n = res.n_streamed + res.n_computed + n_reused
     q_stream = QUALITY_OF_BITS[bits]
-    return (res.n_computed * 1.0 + res.n_streamed * q_stream) / max(n, 1)
+    return (res.n_computed * 1.0
+            + (res.n_streamed + n_reused) * q_stream) / max(n, 1)
 
 
 def _run_plan(plan: RequestPlan, cfg, profile_name, net, spcfg, *,

@@ -19,6 +19,7 @@ Streaming a chunk has no dependencies.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from enum import IntEnum
 from typing import Iterable, NamedTuple, Optional
 
@@ -38,6 +39,46 @@ class State(IntEnum):
     PENDING = 0
     STREAMED = 1
     COMPUTED = 2
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed chunk identity (cross-request KV reuse)
+# ---------------------------------------------------------------------------
+#
+# With causal attention the KV of token-block t depends only on the prefix
+# up to and including t, so two requests share chunk (t, l) KV exactly when
+# their token prefixes through block t are identical. Callers therefore
+# feed a *prefix-closed* span id: the id of block t must encode the whole
+# prefix 0..t (a hash chain — see repro.serving.traffic), not just block
+# t's own tokens. The per-chunk content key further binds the model, the
+# quantization width and the chunking, because a stored bitstream is only
+# reusable for a byte-identical decode: the same token span encoded at
+# different bits (or split at a different chunk_tokens) is a different
+# artifact and must hash to a distinct key.
+
+
+def span_content_id(token_bytes: bytes, prev_id: int = 0) -> int:
+    """Prefix-closed content id of one token block: hash of the block's
+    raw token bytes chained with the id of the preceding block. Stable
+    across processes (blake2b, not Python's salted hash)."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(prev_id.to_bytes(8, "little", signed=False))
+    h.update(token_bytes)
+    return int.from_bytes(h.digest(), "little")
+
+
+def chunk_content_key(span_id: int, layer: int, *, model: str, bits: int,
+                      chunk_tokens: int, head: int = 0) -> int:
+    """Stable 64-bit content key of one KV chunk artifact: the
+    prefix-closed token-span id plus everything that shapes the encoded
+    bytes (model config, quantization bits, chunking, head). Equal keys
+    <=> byte-identical reusable artifacts."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(int(span_id).to_bytes(8, "little", signed=False))
+    for v in (layer, head, bits, chunk_tokens):
+        h.update(int(v).to_bytes(4, "little", signed=True))
+    h.update(model.encode())
+    return int.from_bytes(h.digest(), "little")
 
 
 @dataclasses.dataclass

@@ -89,6 +89,10 @@ class RuntimeController:
         self.deadline_s: Optional[float] = None
         self.slack_guard_s = 2.0
         self.congested_frac = 0.6
+        # content-key store hits: the third leg beside stream/compute —
+        # these chunks ride the cheap cached-egress path, not the
+        # congested origin link (empty = pre-reuse behaviour, exactly)
+        self.store_hits: frozenset = frozenset()
 
     def record_stream(self, t: float, nbytes: float):
         self.bw_win.add(t, nbytes)
@@ -114,6 +118,14 @@ class RuntimeController:
             self.slack_guard_s = slack_guard_s
         if congested_frac is not None:
             self.congested_frac = congested_frac
+
+    def set_store_hits(self, chunks) -> None:
+        """Arm the store-hit leg: `chunks` are content-key hits served
+        from the cloud KV store's edge replica. The controller treats
+        them as a third path — their bytes do not load the origin stream
+        backlog, and a bandwidth drop never migrates them to compute (a
+        cache read is not the congested link)."""
+        self.store_hits = frozenset(chunks)
 
     def _deadline_blocks_stream(self, now: float, bw: float) -> bool:
         """True when this flow is near its deadline and the link is
@@ -158,7 +170,11 @@ class RuntimeController:
         # queueing delay and service dilation both stretch the compute
         # path; a chunk that waits w and runs s effectively costs s*(1+w/s)
         slow = self.compute_slowdown(now) * (1.0 + self.queue_pressure(now))
-        t_s = sum(chunk_bytes[c] for c in stream_queue) / bw \
+        # store-hit chunks ride the cached-egress leg, not the measured
+        # origin link: they neither load the stream backlog nor are
+        # candidates to pull local when the origin bandwidth drops
+        t_s = sum(chunk_bytes[c] for c in stream_queue
+                  if c not in self.store_hits) / bw \
             if stream_queue else 0.0
         t_c = sum(t_comp_pred[c] for c in comp_queue) * slow \
             if comp_queue else 0.0
@@ -169,7 +185,8 @@ class RuntimeController:
             # network is the bottleneck: pull compute-ready streamed chunks
             # to the local path (cheapest-compute first), enough to
             # restore balance
-            cands = [c for c in stream_queue if c in ready]
+            cands = [c for c in stream_queue if c in ready
+                     and c not in self.store_hits]
             cands.sort(key=lambda c: t_comp_pred[c])
             moved_s = 0.0
             for c in cands[:budget]:

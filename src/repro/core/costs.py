@@ -303,6 +303,77 @@ class MemoryModel:
             else self.disk
 
 
+@dataclasses.dataclass(frozen=True)
+class KVStoreModel:
+    """Configuration of the cloud-side content-addressed KV store
+    (``repro.serving.kvstore.CloudKVStore``) and the per-device prefix
+    cache — the cross-request reuse counterpart of :class:`MemoryModel`.
+
+    Hit economics: the store caches, per content key, the transfer-ready
+    encoded bitstream replicated to the edge of the cloud path. A **hit**
+    replaces the encode+stream cost with a per-hit egress cost
+    (:func:`t_store_hit`): the cached bytes skip the cloud-side encode
+    pipeline and, on tree topologies with a cloud-egress stage, bypass
+    that shared stage entirely (the bytes are already at the AP side of
+    it). A **miss** is the ordinary origin path — with the default
+    ``encode_fixed_s=0`` / ``encode_bw=None`` it is bit-identical to a
+    store-less fleet (registration-time artifacts are pre-encoded, the
+    pre-reuse semantics); arming the encode knobs charges misses the
+    cloud-side quantize+entropy-encode latency before their bytes hit
+    the wire. A **device prefix hit** (the requesting device still holds
+    the chunk's assembled KV from an earlier turn) costs nothing on the
+    link at all.
+
+    Parameters
+    ----------
+    capacity_bytes : cloud store budget for cached bitstreams; ``None``
+        is unbounded. Residency never exceeds this (LRU/LFU eviction on
+        insert; an artifact larger than the whole store is refused).
+    policy : ``"lru"`` | ``"lfu"`` victim selection.
+    hit_latency_s : store lookup + cached read latency added to each hit
+        chunk's device-side tail.
+    device_capacity_bytes : per-device prefix-cache budget (assembled KV
+        a device keeps addressable across turns); ``None`` defers to the
+        KV memory server when one is armed, else unbounded.
+    encode_fixed_s / encode_bw : per-chunk cloud-side encode launch
+        overhead and throughput (bytes/s) charged on a miss. Defaults
+        (0.0 / ``None`` = free) keep the miss path bit-identical to a
+        store-less fleet.
+    """
+    capacity_bytes: Optional[float] = None
+    policy: str = "lru"
+    hit_latency_s: float = 2e-4
+    device_capacity_bytes: Optional[float] = None
+    encode_fixed_s: float = 0.0
+    encode_bw: Optional[float] = None
+
+    def __post_init__(self):
+        assert self.capacity_bytes is None or self.capacity_bytes > 0
+        assert self.policy in ("lru", "lfu"), self.policy
+        assert self.hit_latency_s >= 0 and self.encode_fixed_s >= 0
+        assert self.encode_bw is None or self.encode_bw > 0
+        assert self.device_capacity_bytes is None \
+            or self.device_capacity_bytes > 0
+
+
+def t_store_hit(chunk_bytes: float, mean_bw: float, profile,
+                store: KVStoreModel) -> float:
+    """Per-hit egress cost of a cached chunk: store read latency + the
+    cached bitstream over the (egress-bypassing) link + the on-device
+    decode tail. Replaces encode+stream for content-key hits."""
+    return store.hit_latency_s + chunk_bytes / mean_bw \
+        + profile.t_proc(chunk_bytes)
+
+
+def t_store_miss_encode(chunk_bytes: float, store: KVStoreModel) -> float:
+    """Cloud-side encode latency a store miss pays before its first byte
+    egresses. Exactly 0.0 at the defaults (pre-encoded artifacts), so a
+    0%-hit fleet stays bit-identical to a store-less one."""
+    if store.encode_bw is None:
+        return store.encode_fixed_s
+    return store.encode_fixed_s + chunk_bytes / store.encode_bw
+
+
 # ---------------------------------------------------------------------------
 # Ground-truth chunk latency (the simulated device)
 # ---------------------------------------------------------------------------

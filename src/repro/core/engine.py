@@ -61,7 +61,8 @@ import numpy as np
 from repro.core.chunks import Chunk, ChunkGrid, State
 from repro.core.controller import RuntimeController
 from repro.core.costs import (DeviceProfile, EnergyMeter,
-                              GroundTruthLatency)
+                              GroundTruthLatency, KVStoreModel,
+                              t_store_miss_encode)
 from repro.core.scheduler import Schedule
 
 
@@ -97,6 +98,11 @@ class EngineResult:
     tpot_s: float = 0.0           # mean inter-token time after the first
     decode_busy_s: float = 0.0    # this request's share of decode-step time
     token_times: tuple = ()       # absolute per-token delivery times
+    # cross-request KV reuse (zeros without a reuse layer — defaults keep
+    # pre-reuse results bit-identical)
+    n_reused: int = 0             # chunks satisfied by the device prefix cache
+    n_store_hits: int = 0         # chunks streamed as cloud-store hits
+    bytes_hit_stream: float = 0.0  # streamed bytes that rode the hit leg
 
     def breakdown(self) -> dict:
         return {
@@ -257,6 +263,20 @@ class StreamStart:
 
 
 @dataclasses.dataclass(frozen=True)
+class StoreHit:
+    """Engine requests a network transfer for `chunk` whose encoded
+    bitstream is cached in the cloud KV store (a content-key hit). Same
+    shape as :class:`StreamStart`, but the driver routes the bytes over
+    the *cached-egress* leg — the path excluding the shared cloud-egress
+    stage (the store's edge replica serves it) — and adds the store's
+    ``hit_latency_s`` to the on-device tail. Completion comes back with
+    ``path == "stream"``."""
+    chunk: Chunk
+    nbytes: float
+    t_proc: float
+
+
+@dataclasses.dataclass(frozen=True)
 class ComputeStart:
     """Engine requests device service for `chunk`; `duration_s` is the
     ground-truth latency already inflated by the utilization the driver
@@ -356,6 +376,10 @@ class HybridEngine:
     controller: Optional[RuntimeController] = None
     seed: int = 0
     max_new_tokens: int = 0      # 0 = first-token-only (legacy behaviour)
+    # cross-request KV reuse (all empty/None = pre-reuse behaviour, exactly)
+    preloaded: frozenset = frozenset()    # chunks resident before t_start
+    store_hits: frozenset = frozenset()   # chunks cached in the cloud store
+    store_model: Optional[KVStoreModel] = None
 
     def _t_comp_actual(self, c: Chunk, rng, util: Optional[float] = None
                        ) -> float:
@@ -384,17 +408,29 @@ class HybridEngine:
         g = self.grid
 
         state = np.zeros(g.size, np.int8)
+        # prefix-reuse: chunks whose assembled KV is already resident on
+        # the device (this session's previous turn, or a co-resident
+        # request sharing the prefix). STREAMED — present KV satisfies
+        # token deps; hidden states were never materialized, so layer
+        # deps stay unmet, exactly the physics of reused KV.
+        preloaded = frozenset(self.preloaded)
+        store_hits = frozenset(self.store_hits)
+        for c in preloaded:
+            state[g.index(c)] = State.STREAMED
         stream_q: list[Chunk] = []
         comp_q: list[Chunk] = []
         for st in schedule.stages:
-            stream_q.extend(st.stream)
-            comp_q.extend(st.comp)
+            stream_q.extend(c for c in st.stream if c not in preloaded)
+            comp_q.extend(c for c in st.comp if c not in preloaded)
 
         now = t_start
         net_busy = False
         dev_busy = False
         inflight = 0
-        done = 0
+        done = len(preloaded)
+        n_reused = len(preloaded)
+        n_store_hits = 0
+        bytes_hit_stream = 0.0
         total = g.size
         timeline = []
         stream_busy = comp_busy = proc_busy = bytes_streamed = 0.0
@@ -419,7 +455,18 @@ class HybridEngine:
                 c = stream_q.pop(0)
                 nbytes = self.chunk_bytes[c]
                 t_proc = self.profile.t_proc(nbytes)
-                yield StreamStart(c, nbytes, t_proc)
+                if c in store_hits:
+                    # cached in the cloud store: ride the cached-egress leg
+                    yield StoreHit(c, nbytes, t_proc)
+                    n_store_hits += 1
+                    bytes_hit_stream += nbytes
+                else:
+                    if self.store_model is not None:
+                        # miss: the origin encodes before it streams
+                        # (0.0 at the model's defaults — bit-identical)
+                        t_proc += t_store_miss_encode(nbytes,
+                                                      self.store_model)
+                    yield StreamStart(c, nbytes, t_proc)
                 net_busy = True
                 inflight += 1
                 proc_busy += t_proc
@@ -500,7 +547,8 @@ class HybridEngine:
                     chunk_bytes=self.chunk_bytes,
                     t_comp_pred=self.t_comp_pred)
                 for m in migr:
-                    if m.to_path == "compute" and m.chunk in stream_q:
+                    if m.to_path == "compute" and m.chunk in stream_q \
+                            and m.chunk not in store_hits:
                         stream_q.remove(m.chunk)
                         comp_q.insert(0, m.chunk)
                         n_migr += 1
@@ -533,7 +581,9 @@ class HybridEngine:
                 timeline=timeline, streamed_set=streamed_set,
                 computed_set=computed_set, bytes_streamed=bytes_streamed,
                 compute_wait_s=compute_wait, n_compute_queued=n_queued,
-                ttlt_s=ttft, token_times=(ttft,))
+                ttlt_s=ttft, token_times=(ttft,),
+                n_reused=n_reused, n_store_hits=n_store_hits,
+                bytes_hit_stream=bytes_hit_stream)
 
         # ---- decode phase: the driver owns token timing (batched) ----
         t_ctx_done = now
@@ -565,7 +615,9 @@ class HybridEngine:
             compute_wait_s=compute_wait, n_compute_queued=n_queued,
             n_tokens_out=n_out, ttlt_s=ttlt,
             tpot_s=(ttlt - ttft) / max(n_out - 1, 1),
-            decode_busy_s=decode_busy, token_times=tuple(token_t))
+            decode_busy_s=decode_busy, token_times=tuple(token_t),
+            n_reused=n_reused, n_store_hits=n_store_hits,
+            bytes_hit_stream=bytes_hit_stream)
 
     # ------------------------------------------------------------------
     # Classic single-request driver (exclusive link + device)
@@ -581,6 +633,15 @@ class HybridEngine:
             while True:
                 if isinstance(ev, StreamStart):
                     t_end = self.bw.finish_time(now, ev.nbytes) + ev.t_proc
+                    inflight.append((t_end, now, "stream", ev.chunk))
+                    ev = gen.send(None)
+                elif isinstance(ev, StoreHit):
+                    # classic driver has no shared egress stage to bypass;
+                    # the hit still pays the store's service latency
+                    lat = (self.store_model.hit_latency_s
+                           if self.store_model is not None else 0.0)
+                    t_end = (self.bw.finish_time(now, ev.nbytes)
+                             + ev.t_proc + lat)
                     inflight.append((t_end, now, "stream", ev.chunk))
                     ev = gen.send(None)
                 elif isinstance(ev, ComputeStart):

@@ -86,18 +86,19 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import baselines as B
-from repro.core.chunks import Chunk
-from repro.core.costs import (GroundTruthLatency, MemoryModel,
+from repro.core.chunks import Chunk, ChunkGrid, chunk_content_key
+from repro.core.costs import (GroundTruthLatency, KVStoreModel, MemoryModel,
                               NetworkProfile, PROFILES,
                               NETWORKS, RunQueueModel, SharedLinkModel)
 from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
                                DecodeDone, DecodeStart, DecodeTick,
-                               HybridEngine, StartAck, StreamStart, Wait,
-                               context_kv_bytes, token_kv_bytes)
+                               HybridEngine, StartAck, StoreHit, StreamStart,
+                               Wait, context_kv_bytes, token_kv_bytes)
 from repro.core.predictor import (LatencyPredictor, backlog_delay_s,
                                   queue_utilization)
 from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
 from repro.serving.decode import DecodeBatcher, DecodeConfig
+from repro.serving.kvstore import CloudKVStore, DevicePrefixCache
 from repro.serving.memory import (KVMemoryServer, RELOAD_FLOW_BASE,
                                   plan_reload)
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
@@ -151,6 +152,11 @@ class RequestSpec:
     slo_class: str = "default"              # reporting bucket for SLO stats
     max_new_tokens: int = 0                 # 0 = first-token-only (legacy)
     tpot_slo_s: Optional[float] = None      # per-token latency SLO (decode)
+    # cross-request KV reuse: prefix-closed span content ids, one per
+    # token block (repro.core.chunks.span_content_id chains); None keeps
+    # the request anonymous — no lookups, no caching, bit-identical
+    content_ids: Optional[tuple] = None
+    session: Optional[int] = None           # multi-turn session identity
 
 
 @dataclasses.dataclass
@@ -199,6 +205,10 @@ class RequestRecord:
     n_evictions: int = 0                    # times this KV was demoted/dropped
     n_reloads: int = 0                      # reloads completed
     kv_bits: int = 0                        # final resident bits (0=untracked)
+    # cross-request KV reuse outcome (zeros without a reuse layer)
+    n_local_hits: int = 0                   # chunks satisfied on-device
+    n_store_hits: int = 0                   # chunks served as store hits
+    bytes_hit_stream: float = 0.0           # streamed bytes off the egress
 
 
 @dataclasses.dataclass
@@ -241,6 +251,9 @@ class _ActiveRequest:
     reload_s: float = 0.0
     n_evictions: int = 0
     n_reloads: int = 0
+    # cross-request reuse: Chunk -> 64-bit content key (empty when the
+    # request is anonymous or the store is unarmed)
+    key_of: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -256,6 +269,10 @@ class FleetReport:
     # ran without one — summary() then omits the memory block entirely,
     # keeping pre-memory summaries bit-identical)
     memory: Optional[dict] = None
+    # cross-request reuse telemetry (None without an armed kvstore — the
+    # summary() block is then absent, keeping no-reuse summaries
+    # bit-identical)
+    reuse: Optional[dict] = None
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft_s for r in self.records])
@@ -293,6 +310,27 @@ class FleetReport:
             **self._decode_summary(),
             **self._slo_summary(),
             **self._memory_summary(),
+            **self._reuse_summary(),
+        }
+
+    def _reuse_summary(self) -> dict:
+        """Cross-request reuse block of :meth:`summary` — present only
+        when the cluster ran a :class:`CloudKVStore`.
+        ``egress_bytes_total`` is the streamed bytes that actually
+        crossed the cloud origin (store hits served from the edge
+        replica are excluded) — the wide-area cost reuse exists to cut;
+        ``store_hit_rate`` is over every content-key lookup the store
+        answered."""
+        if self.reuse is None:
+            return {}
+        store = self.reuse["store"]
+        return {
+            "store_hit_rate": store["hit_rate"],
+            "store_evictions": store["n_evictions"],
+            "local_hits_total": self.reuse["local_hits_total"],
+            "store_hits_total": self.reuse["store_hits_total"],
+            "egress_bytes_total": self.reuse["egress_bytes_total"],
+            "bytes_hit_stream_total": self.reuse["bytes_hit_stream_total"],
         }
 
     def _decode_summary(self) -> dict:
@@ -510,6 +548,18 @@ class ServingCluster:
         to pre-decode behaviour whether or not ``decode`` is set; a
         decoding trace with ``decode=None`` uses ``DecodeConfig()``
         defaults.
+    kvstore : a ``repro.core.costs.KVStoreModel`` arms cross-request KV
+        reuse: one fleet-wide :class:`repro.serving.kvstore.CloudKVStore`
+        of encoded chunk bitstreams plus a per-device
+        :class:`~repro.serving.kvstore.DevicePrefixCache`. Requests that
+        carry ``RequestSpec.content_ids`` resolve their chunks at
+        admission — device prefix hits are preloaded (no link bytes, no
+        compute), cloud store hits stream over the cached-egress leg
+        (the flow path *without* the shared cloud-egress stage, plus the
+        store's ``hit_latency_s``), misses stream the origin path and
+        populate the store on completion. ``kvstore=None``, or a trace
+        with ``content_ids=None`` everywhere at the model's cost
+        defaults, is bit-identical to the no-reuse fleet.
     link_core : ``"vectorized"`` (default) drives the struct-of-arrays
         :class:`repro.serving.resources.LinkTopology`; ``"scalar"``
         selects the per-flow reference core
@@ -542,6 +592,7 @@ class ServingCluster:
                  refresh_every: int = 0,
                  memory: Optional[MemoryModel] = None,
                  memory_budget: Optional[float] = None,
+                 kvstore: Optional[KVStoreModel] = None,
                  link_core: str = "vectorized",
                  link_telemetry: bool = True,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
@@ -590,6 +641,7 @@ class ServingCluster:
         if memory is None and memory_budget is not None:
             memory = MemoryModel(capacity_bytes=float(memory_budget))
         self.memory_model = memory
+        self.kvstore_model = kvstore
         assert link_core in ("vectorized", "scalar"), link_core
         self.link_core = link_core
         self.link_telemetry = link_telemetry
@@ -604,6 +656,8 @@ class ServingCluster:
         self._computing: dict[int, set] = {}
         self._batchers: dict[int, DecodeBatcher] = {}
         self._memory: dict[int, KVMemoryServer] = {}
+        self._kvstore: Optional[CloudKVStore] = None
+        self._prefix: dict[int, DevicePrefixCache] = {}
         self._n_finalized = 0                # predictor refresh cadence
         # events / wall-clock of the most recent run() (simcore profiling)
         self.last_sim_stats: Optional[dict] = None
@@ -675,6 +729,22 @@ class ServingCluster:
         :func:`telemetry_policy` and ``slo.predict_ttft``."""
         best = 1.0
         for name, mean_bw, lm in self._shared_stages(device):
+            st = self._link_server.stages.get(name) \
+                if self._link_server is not None else None
+            n = (len(st.active) if st is not None else 0) + 1
+            frac = lm.per_flow_fraction(n) if lm else 1.0 / n
+            best = min(best, frac * mean_bw / self.net.mean_bw)
+        return best
+
+    def projected_hit_frac(self, device: int = 0) -> float:
+        """Like :meth:`projected_flow_frac`, but for a store-hit flow:
+        the cached-egress leg skips the shared cloud-egress stage, so
+        only the remaining shared stages (the AP uplink) bound it. On
+        egress-free topologies this equals ``projected_flow_frac``."""
+        best = 1.0
+        for name, mean_bw, lm in self._shared_stages(device):
+            if name == "egress":
+                continue
             st = self._link_server.stages.get(name) \
                 if self._link_server is not None else None
             n = (len(st.active) if st is not None else 0) + 1
@@ -773,6 +843,14 @@ class ServingCluster:
                          has_nic=self._nic_profiles is not None,
                          has_egress=self.egress is not None)
 
+    def _hit_path(self, device: int) -> tuple:
+        """Path of a cloud-store hit: the store's edge replica sits
+        below the cloud-egress stage, so the cached bytes cross the
+        device's NIC and its AP uplink but never the shared egress."""
+        return tree_path(device, self.ap_of_device[device], self.n_aps,
+                         has_nic=self._nic_profiles is not None,
+                         has_egress=False)
+
     # ---- main loop ----
     def run(self, specs: list[RequestSpec]) -> FleetReport:
         specs = sorted(specs, key=lambda s: s.arrival_s)
@@ -814,6 +892,22 @@ class ServingCluster:
             if self.memory_model is not None else {}
         # rid -> [outstanding reload legs, t_begin, stream dequant tail]
         reloads: dict[int, list] = {}
+
+        # ---- cross-request KV reuse servers ----
+        if self.kvstore_model is not None:
+            self._kvstore = CloudKVStore(self.kvstore_model)
+            self._prefix = {
+                d: DevicePrefixCache(self.kvstore_model.device_capacity_bytes)
+                for d in range(self.n_devices)}
+        else:
+            self._kvstore = None
+            self._prefix = {}
+        # content-key bookkeeping: which rids back each prefix-cache key
+        # (copy semantics — several residents may hold the same prefix),
+        # and each rid's registered keys (persists while parked)
+        prefix_owners: dict[int, dict[int, set]] = {
+            d: {} for d in range(self.n_devices)}
+        rid_keys: dict[int, set] = {}
 
         active: dict[int, _ActiveRequest] = {}
         queue: list[tuple[int, RequestSpec]] = []
@@ -915,9 +1009,17 @@ class ServingCluster:
             for ev in evs:
                 if ev.action == "downgrade":
                     continue
+                if ev.action == "retire":
+                    # a parked prefix segment was reclaimed: its keys
+                    # stop being device-addressable, nothing to suspend
+                    prefix_unindex(dev, ev.rid, forget=True)
+                    continue
                 vst = active.get(ev.rid)
                 if vst is not None:
                     vst.n_evictions += 1
+                if self._kvstore is not None:
+                    # demoted/dropped KV is not addressable until reload
+                    prefix_unindex(dev, ev.rid)
                 if bat is not None:
                     bat.suspend(ev.rid)
 
@@ -927,6 +1029,84 @@ class ServingCluster:
                                            pinned=pinned_rids(dev),
                                            idle=idle_rids(dev))
             apply_evictions(dev, evs)
+
+        # ---- cross-request KV reuse wiring (all no-ops when unarmed) ----
+        def reuse_view(rid: int, spec: RequestSpec, wl):
+            """Resolve the request's chunks against the reuse servers at
+            admission: content keys from its prefix-closed span ids,
+            device prefix matches first (near-free local hits), cloud
+            store lookups for the rest (counted hits/misses). Returns
+            (Chunk -> key, ChunkReuse) — (empty, None) for anonymous
+            requests or unarmed stores."""
+            if self._kvstore is None or spec.content_ids is None:
+                return {}, None
+            n_h = wl.n_h if (getattr(self.spcfg, "scheduler_mode", "engine")
+                             == "paper" and wl.n_h > 1) else 1
+            grid = ChunkGrid(n_t=wl.n_t, n_l=wl.n_l, n_h=n_h)
+            ids = spec.content_ids
+            key_of = {c: chunk_content_key(
+                ids[c.t], c.l, model=self.cfg.name,
+                bits=self.spcfg.quant_bits,
+                chunk_tokens=self.spcfg.chunk_tokens, head=c.h)
+                for c in grid.chunks() if c.t < len(ids)}
+            local_keys = self._prefix[spec.device].match(key_of.values())
+            local, store = set(), set()
+            for c, key in key_of.items():
+                if key in local_keys:
+                    local.add(c)
+                elif self._kvstore.lookup(key, now):
+                    store.add(c)
+            return key_of, B.ChunkReuse(local=frozenset(local),
+                                        store=frozenset(store),
+                                        model=self.kvstore_model)
+
+        def prefix_add(dev: int, rid: int, key: int, nbytes: float):
+            """Register `rid` as a backer of prefix `key`; first backer
+            makes the key resident in the device prefix cache."""
+            rid_keys.setdefault(rid, set()).add(key)
+            owners = prefix_owners[dev].setdefault(key, set())
+            if rid not in owners:
+                owners.add(rid)
+                # a standalone-bounded cache may evict keys to make room:
+                # drop their owner index (backers keep their rid_keys
+                # entries — re-registration would simply re-insert)
+                for evicted in self._prefix[dev].insert(key, nbytes, now):
+                    prefix_owners[dev].pop(evicted, None)
+
+        def prefix_unindex(dev: int, rid: int, *, forget: bool = False):
+            """`rid`'s KV left device DRAM (demote/drop/retire/release):
+            keys it backed lose one owner; orphaned keys leave the
+            prefix cache. ``forget`` additionally drops the rid's key
+            set (final — no reload will re-register)."""
+            for key in rid_keys.get(rid, ()):
+                owners = prefix_owners[dev].get(key)
+                if owners is None:
+                    continue
+                owners.discard(rid)
+                if not owners:
+                    del prefix_owners[dev][key]
+                    self._prefix[dev].remove(key)
+            if forget:
+                rid_keys.pop(rid, None)
+
+        def prefix_reindex(dev: int, rid: int, nbytes: float):
+            """`rid`'s KV is resident again (reload landed): re-register
+            every key it had assembled."""
+            for key in list(rid_keys.get(rid, ())):
+                prefix_add(dev, rid, key, nbytes)
+
+        def register_chunk(st: _ActiveRequest, chunk: Chunk, *,
+                           streamed: bool):
+            """One chunk of `st` finished assembling on the device: its
+            content key becomes prefix-addressable, and a freshly
+            streamed miss populates the cloud store (computed KV never
+            reached the cloud encoder, so it cannot be cached there)."""
+            key = st.key_of.get(chunk)
+            if key is None:
+                return
+            if streamed and chunk not in st.plan.reuse_store:
+                self._kvstore.insert(key, st.plan.bytes_map[chunk], now)
+            prefix_add(st.spec.device, st.rid, key, st.kv_chunk_bytes)
 
         def start_reload(rid: int):
             """Plan and launch an evicted context's reload on the real
@@ -1017,6 +1197,8 @@ class ServingCluster:
                 rid, now, pinned=pinned_rids(dev) | {rid},
                 idle=idle_rids(dev))
             apply_evictions(dev, evs)
+            if self._kvstore is not None:
+                prefix_reindex(dev, rid, st.kv_chunk_bytes)
             st.reload_s += now - t_begin
             st.n_reloads += 1
             bat = self._batchers.get(dev)
@@ -1052,6 +1234,17 @@ class ServingCluster:
                         st.stream_t_proc = ev.t_proc
                         link_server.add(st.rid, ev.nbytes,
                                         path=self._flow_path(dev))
+                        ev = st.gen.send(None)
+                    elif isinstance(ev, StoreHit):
+                        # cloud-store hit: the cached bitstream rides the
+                        # egress-free leg; the store's service latency
+                        # lands in the on-device tail
+                        st.stream_chunk = ev.chunk
+                        st.stream_t0 = now
+                        st.stream_t_proc = ev.t_proc \
+                            + st.plan.store_model.hit_latency_s
+                        link_server.add(st.rid, ev.nbytes,
+                                        path=self._hit_path(dev))
                         ev = st.gen.send(None)
                     elif isinstance(ev, ComputeStart):
                         if self.run_queue is not None:
@@ -1094,9 +1287,11 @@ class ServingCluster:
             policy = spec.policy
             if self.policy_fn is not None:
                 policy = self.policy_fn(spec, self)
+            key_of, reuse = reuse_view(rid, spec, wls[rid])
             plan = B.plan_policy(policy, self.cfg, wls[rid],
                                  self.profile_name, self.net, self.spcfg,
-                                 util=self._admission_util(spec.device))
+                                 util=self._admission_util(spec.device),
+                                 reuse=reuse)
             deadline_abs = (spec.arrival_s + spec.deadline_s
                             if spec.deadline_s is not None else None)
             weight = spec.weight
@@ -1143,7 +1338,9 @@ class ServingCluster:
                 cfg_model=self.cfg, util=self.static_util,
                 controller=plan.controller,
                 seed=self.seed + spec.seed,
-                max_new_tokens=spec.max_new_tokens)
+                max_new_tokens=spec.max_new_tokens,
+                preloaded=plan.reuse_local, store_hits=plan.reuse_store,
+                store_model=plan.store_model)
             comp_total = plan_compute_seconds(plan)
             st = _ActiveRequest(rid=rid, spec=spec, plan=plan,
                                 gen=eng.session(
@@ -1160,7 +1357,8 @@ class ServingCluster:
                                 obs_load=self.device_load(spec.device),
                                 obs_backlog_s=self.device_backlog_s(
                                     spec.device),
-                                obs_n_flows=self.active_flows())
+                                obs_n_flows=self.active_flows(),
+                                key_of=key_of)
             if self._memory:
                 self._memory[spec.device].admit(rid, now)
                 # resident bytes each assembled chunk adds (full-precision
@@ -1170,6 +1368,24 @@ class ServingCluster:
                     context_kv_bytes(self.cfg, plan.context_len)
                     * self.memory_model.resident_bits / 16.0
                     / max(plan.grid.size, 1))
+            if self._kvstore is not None and key_of:
+                if not st.kv_chunk_bytes:
+                    # no memory server: prefix-cache accounting still
+                    # needs the chunk's resident footprint
+                    st.kv_chunk_bytes = (
+                        context_kv_bytes(self.cfg, plan.context_len)
+                        / max(plan.grid.size, 1))
+                if plan.reuse_local:
+                    # copy semantics: the new request materializes its
+                    # own copy of each preloaded prefix chunk. Charge
+                    # them now — no completion events ever fire for
+                    # preloaded chunks — and co-own their prefix keys.
+                    if self._memory:
+                        charge_kv(st, len(plan.reuse_local)
+                                  * st.kv_chunk_bytes)
+                    for c in plan.reuse_local:
+                        prefix_add(spec.device, rid, key_of[c],
+                                   st.kv_chunk_bytes)
             active[rid] = st
             res = drive(st, prime=True)
             if res is not None:
@@ -1184,7 +1400,16 @@ class ServingCluster:
             if self._memory:
                 m = self._memory[st.spec.device]
                 kv_bits = m.bits_of(st.rid)
-                m.release(st.rid, now)
+                parked = False
+                if self._kvstore is not None and st.key_of:
+                    # keep the assembled prefix addressable for the next
+                    # request sharing it (radix-cache-style parking; the
+                    # segment is the preferred eviction victim)
+                    parked = m.park(st.rid, now)
+                if not parked:
+                    m.release(st.rid, now)
+                    if self._kvstore is not None:
+                        prefix_unindex(st.spec.device, st.rid, forget=True)
             quality = B._mixed_quality(res, st.plan.quality_bits)
             ttft = res.ttft_s - arrival_s[st.rid]
             ttlt = res.ttlt_s - arrival_s[st.rid]
@@ -1220,7 +1445,9 @@ class ServingCluster:
                 tpot_s=res.tpot_s, tpot_slo_s=st.spec.tpot_slo_s,
                 stage_shares=link_server.stage_shares(st.rid),
                 reload_s=st.reload_s, n_evictions=st.n_evictions,
-                n_reloads=st.n_reloads, kv_bits=kv_bits))
+                n_reloads=st.n_reloads, kv_bits=kv_bits,
+                n_local_hits=res.n_reused, n_store_hits=res.n_store_hits,
+                bytes_hit_stream=res.bytes_hit_stream))
             if self.predictor is not None:
                 share = self.observed_bottleneck_share(st.rid)
                 self.predictor.observe(
@@ -1297,6 +1524,8 @@ class ServingCluster:
                     self._computing[st.spec.device].discard(rid)
                 if self._memory:
                     charge_kv(st, st.kv_chunk_bytes)
+                if self._kvstore is not None:
+                    register_chunk(st, chunk, streamed=False)
                 res = drive(st, Completion("compute", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
@@ -1338,6 +1567,8 @@ class ServingCluster:
                 st.stream_chunk = None
                 if self._memory:
                     charge_kv(st, st.kv_chunk_bytes)
+                if self._kvstore is not None:
+                    register_chunk(st, chunk, streamed=True)
                 res = drive(st, Completion("stream", chunk, t0, t))
                 if res is not None:
                     finalize(st, res)
@@ -1380,12 +1611,29 @@ class ServingCluster:
                     t["resident_p99_bytes"] for t in tele),
             }
             for k in ("n_evictions", "n_downgrades", "n_demotions",
-                      "n_drops", "n_reloads", "reload_bytes",
+                      "n_drops", "n_reloads", "reload_bytes", "n_retired",
                       "charged_bytes_total", "disk_bytes_written",
                       "disk_bytes_read", "disk_busy_s"):
                 vals = [t[k] for t in tele if k in t]
                 if vals:
                     mem_summary[k] = type(vals[0])(sum(vals))
+        reuse_summary = None
+        if self._kvstore is not None:
+            prefix_tele = [p.telemetry() for p in self._prefix.values()]
+            reuse_summary = {
+                "store": self._kvstore.telemetry(),
+                "local_hits_total": sum(r.n_local_hits for r in records),
+                "store_hits_total": sum(r.n_store_hits for r in records),
+                "bytes_hit_stream_total": sum(r.bytes_hit_stream
+                                              for r in records),
+                # bytes that actually crossed the cloud origin: streamed
+                # minus the store-hit bytes served from the edge replica
+                "egress_bytes_total": sum(r.bytes_streamed
+                                          - r.bytes_hit_stream
+                                          for r in records),
+                "prefix_lookups": sum(t["n_lookups"] for t in prefix_tele),
+                "prefix_hits": sum(t["n_hits"] for t in prefix_tele),
+            }
         # clear the whole telemetry surface so a reused cluster never
         # exposes one run's end-state to the next run's policy_fn
         self._link_server = None
@@ -1393,7 +1641,9 @@ class ServingCluster:
         self._computing = {}
         self._batchers = {}
         self._memory = {}
+        self._kvstore = None
+        self._prefix = {}
         return FleetReport(records=sorted(records, key=lambda r: r.rid),
                            makespan_s=makespan, n_arrived=len(specs),
                            shed=sorted(shed, key=lambda s: s.rid),
-                           memory=mem_summary)
+                           memory=mem_summary, reuse=reuse_summary)

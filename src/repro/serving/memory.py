@@ -93,6 +93,7 @@ class _Resident:
     ready: bool = False           # context fully assembled (evictable)
     evicted: bool = False         # demoted/dropped: needs reload
     reloading: bool = False
+    parked: bool = False          # finalized; kept for prefix reuse
 
 
 class KVMemoryServer:
@@ -136,6 +137,7 @@ class KVMemoryServer:
         self.n_drops = 0
         self.n_reloads = 0
         self.reload_bytes = 0.0
+        self.n_retired = 0            # parked prefix segments reclaimed
         # residency history for peak / time-weighted percentiles
         self.peak_resident = 0.0
         self._hist_t: list[float] = [0.0]
@@ -192,6 +194,7 @@ class KVMemoryServer:
             "n_drops": self.n_drops,
             "n_reloads": self.n_reloads,
             "reload_bytes": self.reload_bytes,
+            "n_retired": self.n_retired,
             "charged_bytes_total": self.charged_total,
         }
         if self.disk is not None:
@@ -253,6 +256,44 @@ class KVMemoryServer:
             self.disk_total -= r.disk_bytes
         self._record(t)
 
+    # ---- prefix-reuse parking (radix-cache-style retained segments) ----
+    def park(self, rid: int, t: float) -> bool:
+        """Request finalized, but its assembled prefix KV stays
+        addressable for cross-request reuse (the device prefix cache
+        indexes it by content key). Parked segments remain resident and
+        fully evictable — they are the *preferred* victims under
+        pressure, and eviction retires them outright (``"retire"``
+        action: the cluster must invalidate the prefix-cache keys)
+        instead of demoting a session nobody will resume. Returns False
+        (caller should ``release`` instead) when there is nothing worth
+        parking: the KV is evicted/reloading or empty."""
+        r = self._res[rid]
+        if r.evicted or r.reloading or r.bytes <= 0:
+            return False
+        r.parked = True
+        r.ready = True
+        r.t_last_use = t
+        self._record(t)
+        return True
+
+    def parked_rids(self) -> list[int]:
+        return [r.rid for r in self._res.values() if r.parked]
+
+    def retire(self, rid: int, t: float) -> None:
+        """Explicitly reclaim a parked segment (cluster-side
+        invalidation, e.g. end of run): resident bytes -> freed, any
+        disk copy -> dropped, tracking removed."""
+        r = self._res.pop(rid)
+        assert r.parked, f"rid {rid} is not parked"
+        if r.bytes > 0:
+            self.freed_total += r.bytes
+            self.resident_total -= r.bytes
+        if r.disk_bytes > 0:
+            self.dropped_total += r.disk_bytes
+            self.disk_total -= r.disk_bytes
+        self.n_retired += 1
+        self._record(t)
+
     # ---- reload protocol ----
     def begin_reload(self, rid: int, t: float) -> KVReload:
         r = self._res[rid]
@@ -303,6 +344,12 @@ class KVMemoryServer:
         cands = self._candidates(pinned)
         if not cands:
             return None
+        # parked prefix segments are speculative value; live sequences
+        # are committed work — reclaim speculation first (LRU among the
+        # parked, regardless of policy)
+        parked = [r for r in cands if r.parked]
+        if parked:
+            return min(parked, key=lambda r: (r.t_last_use, r.rid))
         if self.model.policy == "idle":
             parked = [r for r in cands if r.rid in idle]
             if parked:
@@ -315,6 +362,14 @@ class KVMemoryServer:
         return min(cands, key=lambda r: (r.t_last_use, r.rid))
 
     def _evict_step(self, r: _Resident, t: float) -> EvictionEvent:
+        if r.parked:
+            # retire the parked segment outright: no session resumes it,
+            # so demotion/downgrade would spend tier bandwidth on bytes
+            # whose only value was being DRAM-resident
+            freed = r.bytes
+            bits = r.bits
+            self.retire(r.rid, t)
+            return EvictionEvent(r.rid, "retire", freed, bits, t)
         if self.model.policy == "bits":
             lower = [b for b in BITRATE_LEVELS if b < r.bits]
             if lower:

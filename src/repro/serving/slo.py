@@ -40,6 +40,7 @@ import dataclasses
 from typing import Optional
 
 from repro.compression.quantize import downgrade_ladder
+from repro.core.costs import t_store_hit
 from repro.core.costs import t_stream as chunk_stream_seconds
 from repro.core.engine import (context_kv_bytes,
                                decode_first_token_seconds,
@@ -164,9 +165,32 @@ def predict_ttft(plan, cluster, spec, now: float, *,
         # and its shared-stage bottleneck — ignoring the NIC would
         # over-admit exactly when the NIC is the bottleneck
         bw_eff = min(bw_eff, nic_bw)
+    # cross-request reuse folds into the projection the same way it
+    # bends the plan: local prefix hits cost nothing on the wire, store
+    # hits ride the cached-egress leg at its own (egress-free) fair
+    # share. Empty sets / missing attributes = the pre-reuse projection,
+    # bit-identical.
+    reuse_local = getattr(plan, "reuse_local", frozenset())
+    reuse_store = getattr(plan, "reuse_store", frozenset())
+    store_model = getattr(plan, "store_model", None)
+    bw_hit = bw_eff
+    if reuse_store and store_model is not None:
+        hit_frac_fn = getattr(cluster, "projected_hit_frac", None)
+        hit_frac = hit_frac_fn(spec.device) if hit_frac_fn is not None \
+            else frac
+        bw_hit = cluster.net.mean_bw * hit_frac
+        if nic_bw is not None:
+            bw_hit = min(bw_hit, nic_bw)
     t_stream = 0.0
     for stage in plan.schedule.stages:
         for c in stage.stream:
+            if c in reuse_local:
+                continue
+            if c in reuse_store and store_model is not None:
+                t_stream += t_store_hit(plan.bytes_map[c] * factor,
+                                        bw_hit, cluster.profile,
+                                        store_model)
+                continue
             # the planner's own per-chunk stream cost, at the projected
             # bottleneck bandwidth (keeps admission in lockstep with
             # planning if the stream cost model evolves)

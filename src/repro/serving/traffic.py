@@ -32,6 +32,22 @@ Decode: ``out_len_mix`` draws a response length per request (chat
 replies vs. long generations), setting ``RequestSpec.max_new_tokens`` so
 the fleet's continuous decode batches carry a realistic length mix; an
 empty mix keeps every spec first-token-only.
+
+Cross-request KV reuse: with ``prefix_pool > 0`` every request carries
+prefix-closed span content ids (``repro.core.chunks.span_content_id``
+hash chains). The leading ``prefix_frac`` of each request's token blocks
+comes from a Zipf-popular pool of shared prefixes (system prompts / RAG
+documents — rank ``r`` drawn with probability ∝ ``1/r^prefix_zipf_a``),
+the tail is request-unique. Reuse draws come from a **separate** rng
+stream (``seed + REUSE_SEED_SALT``), so arming the knobs never perturbs
+the base trace — every other spec field is bit-identical to
+``prefix_pool=0``. ``prefix_frac=0.0`` is the 0%-overlap configuration:
+content ids present (the store counts misses) but never two alike.
+:func:`session_trace` generates multi-turn chat sessions instead: each
+turn re-sends the whole history, so turn ``j``'s content chain is turn
+``j-1``'s plus ``turn_growth_chunks`` fresh blocks — the on-device
+prefix-reuse workload (same device the whole session, think-time gaps
+between turns).
 """
 from __future__ import annotations
 
@@ -40,8 +56,14 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.chunks import span_content_id
 from repro.data.workloads import DATASETS
 from repro.serving.cluster import RequestSpec
+
+# offset of the reuse rng stream from the trace seed: reuse draws never
+# consume from the base stream, so prefix_pool=0 vs >0 traces share every
+# non-reuse field bit-for-bit
+REUSE_SEED_SALT = 104729
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +94,20 @@ class TrafficProfile:
     # decode: response-length classes (n output tokens, draw weight);
     # empty = first-token-only fleets (max_new_tokens 0 on every spec)
     out_len_mix: tuple = ()
+    # cross-request KV reuse: prefix_pool > 0 arms content-id generation
+    # (0 keeps every spec anonymous — bit-identical to pre-reuse traces).
+    # The leading prefix_frac of each request's token blocks is drawn
+    # from a pool of prefix_pool shared chains with Zipf popularity
+    # (p ∝ 1/rank^prefix_zipf_a); the tail is request-unique.
+    prefix_pool: int = 0
+    prefix_zipf_a: float = 1.1
+    prefix_frac: float = 0.5
+    # multi-turn sessions (session_trace only): (n turns, draw weight)
+    # mix, mean exponential think time between turns, and how many fresh
+    # chunk-sized blocks each turn appends to the re-sent history
+    session_turns_mix: tuple = ((3, 1.0),)
+    think_time_s: float = 8.0
+    turn_growth_chunks: int = 1
 
 
 def _arrival_times(profile: TrafficProfile, n: int,
@@ -104,6 +140,35 @@ def _weighted(table: tuple, rng: np.random.Generator) -> str:
     return names[rng.choice(len(names), p=w / w.sum())]
 
 
+def _zipf_pmf(n: int, a: float) -> np.ndarray:
+    """Explicit truncated-Zipf pmf: p(rank r) ∝ 1/r^a, r in 1..n."""
+    p = 1.0 / np.arange(1, n + 1, dtype=float) ** a
+    return p / p.sum()
+
+
+def _content_chain(n_blocks: int, n_prefix: int, prefix_id: int,
+                   unique_tag: str, *, base: tuple = ()) -> tuple:
+    """Prefix-closed span-id chain: shared head, request-unique tail.
+
+    Block ``j < n_prefix`` hashes ``prefix:<id>:<j>`` so every request
+    drawing the same pool entry produces byte-identical leading ids (and
+    therefore identical content keys — the store/prefix-cache hit path);
+    later blocks hash ``<unique_tag>:<j>`` so tails never collide. When
+    ``base`` is non-empty the chain continues from it instead (multi-turn
+    history extension: ``base`` is the previous turn's full chain).
+    """
+    ids = list(base)
+    prev = ids[-1] if ids else 0
+    for j in range(len(ids), n_blocks):
+        if j < n_prefix:
+            tok = f"prefix:{prefix_id}:{j}".encode()
+        else:
+            tok = f"{unique_tag}:{j}".encode()
+        prev = span_content_id(tok, prev)
+        ids.append(prev)
+    return tuple(ids)
+
+
 def generate_trace(profile: TrafficProfile, n_requests: int,
                    *, seed: int = 0,
                    rng: Optional[np.random.Generator] = None
@@ -130,6 +195,13 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
             f"device_mix entries out of range [0, {profile.n_devices})"
         dev_p = np.array([w for _, w in profile.device_mix], float)
         dev_p /= dev_p.sum()
+    # reuse draws live on their own stream so arming prefix_pool never
+    # shifts the base draw sequence (dataset/ctx/wfq/slo/out_len/device)
+    reuse_rng = None
+    zipf_p = None
+    if profile.prefix_pool > 0:
+        reuse_rng = np.random.default_rng(seed + REUSE_SEED_SALT)
+        zipf_p = _zipf_pmf(profile.prefix_pool, profile.prefix_zipf_a)
     specs = []
     for i, t in enumerate(arrivals):
         ds_name = _weighted(profile.context_mix, rng)
@@ -152,12 +224,82 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
             max_new = out_lens[rng.choice(len(out_lens), p=out_p)]
         dev = i % max(profile.n_devices, 1) if dev_p is None \
             else devices[rng.choice(len(devices), p=dev_p)]
+        content_ids = None
+        if reuse_rng is not None:
+            n_blocks = max(ctx // profile.chunk_tokens, 1)
+            n_prefix = min(int(round(profile.prefix_frac * n_blocks)),
+                           n_blocks)
+            pool_idx = int(reuse_rng.choice(profile.prefix_pool, p=zipf_p))
+            content_ids = _content_chain(
+                n_blocks, n_prefix, pool_idx, f"req:{seed}:{i}")
         specs.append(RequestSpec(
             arrival_s=float(t), context_len=ctx, dataset=ds_name,
             policy=_weighted(profile.policy_mix, rng), seed=seed + i,
             device=dev, weight=wfq_w,
             deadline_s=deadline, slo_class=slo_class,
-            max_new_tokens=max_new, tpot_slo_s=tpot_slo))
+            max_new_tokens=max_new, tpot_slo_s=tpot_slo,
+            content_ids=content_ids))
+    return specs
+
+
+def session_trace(profile: TrafficProfile, n_sessions: int,
+                  *, seed: int = 0) -> list[RequestSpec]:
+    """Multi-turn chat sessions with cross-turn KV reuse.
+
+    Each session pins one device (session affinity), opens with a
+    context drawn like :func:`generate_trace`, and re-sends its whole
+    history every turn: turn ``j``'s content chain is turn ``j-1``'s
+    plus ``turn_growth_chunks`` fresh blocks, with exponential think
+    time between turns. When ``prefix_pool > 0`` the opening turn's
+    leading blocks come from the shared Zipf pool, so sessions also
+    share cross-session prefixes; otherwise chains are session-unique
+    (pure intra-session reuse). Specs carry ``session=<idx>`` so the
+    report can group turns.
+    """
+    rng = np.random.default_rng(seed)
+    reuse_rng = np.random.default_rng(seed + REUSE_SEED_SALT)
+    zipf_p = (_zipf_pmf(profile.prefix_pool, profile.prefix_zipf_a)
+              if profile.prefix_pool > 0 else None)
+    starts = _arrival_times(profile, n_sessions, rng)
+    turn_counts = [int(n) for n, _ in profile.session_turns_mix]
+    turn_p = np.array([w for _, w in profile.session_turns_mix], float)
+    turn_p /= turn_p.sum()
+    max_blocks = max(profile.max_context // profile.chunk_tokens, 1)
+    specs = []
+    req_idx = 0
+    for s, t0 in enumerate(starts):
+        dev = s % max(profile.n_devices, 1)
+        n_turns = turn_counts[rng.choice(len(turn_counts), p=turn_p)]
+        ds_name = _weighted(profile.context_mix, rng)
+        ds = DATASETS[ds_name]
+        raw = ds.mean_len * np.exp(rng.normal(0.0, profile.context_jitter))
+        raw = float(np.clip(raw, profile.min_context, profile.max_context))
+        n_blocks = max(int(raw // profile.chunk_tokens), 1)
+        n_prefix = 0
+        pool_idx = 0
+        if zipf_p is not None:
+            n_prefix = min(int(round(profile.prefix_frac * n_blocks)),
+                           n_blocks)
+            pool_idx = int(reuse_rng.choice(profile.prefix_pool, p=zipf_p))
+        ids: tuple = ()
+        t = float(t0)
+        for turn in range(n_turns):
+            if turn > 0:
+                t += float(rng.exponential(profile.think_time_s))
+                n_blocks = min(n_blocks + profile.turn_growth_chunks,
+                               max_blocks)
+            ids = _content_chain(
+                n_blocks, n_prefix, pool_idx,
+                f"sess:{seed}:{s}:t{turn}", base=ids)
+            specs.append(RequestSpec(
+                arrival_s=t,
+                context_len=n_blocks * profile.chunk_tokens,
+                dataset=ds_name,
+                policy=_weighted(profile.policy_mix, rng),
+                seed=seed + req_idx, device=dev,
+                content_ids=ids, session=s))
+            req_idx += 1
+    specs.sort(key=lambda sp: sp.arrival_s)
     return specs
 
 

@@ -112,6 +112,14 @@ def test_memory_bench_registered():
     assert "kv_memory" in _registered_save_names()
 
 
+def test_reuse_bench_registered():
+    """The cross-request KV reuse bench is wired into the runner under
+    the ``reuse`` name and its save literal is discoverable by the
+    checked-in-results validator."""
+    assert ("reuse", "benchmarks.bench_reuse") in BENCHES
+    assert "reuse" in _registered_save_names()
+
+
 def test_simcore_bench_registered():
     """The simulator-throughput bench is wired into the runner and its
     results file validates against the registry."""

@@ -1,0 +1,154 @@
+"""Content-addressed KV reuse layer: key identity, store behavior, and
+hit fidelity.
+
+Identity: `span_content_id` chains must be prefix-closed (same leading
+blocks <=> same leading ids, one divergent block poisons every later
+id), and `chunk_content_key` must separate artifacts that differ in any
+byte-shaping parameter — the same token span at different quantization
+bits or chunk sizes is a different artifact and must never alias.
+
+Store: LRU/LFU victim order, oversized-insert refusal, and the
+`DevicePrefixCache.match` accounting the cluster's admission leans on.
+
+Fidelity: a store hit serves the *encoded bitstream*, so the device-side
+decode is the same `kernels/kv_dequant` kernel as a cold stream — a hit
+round-tripped through it must match the numpy dequantize reference.
+"""
+import numpy as np
+import pytest
+
+from repro.compression.quantize import dequantize, quantize
+from repro.core.chunks import chunk_content_key, span_content_id
+from repro.core.costs import KVStoreModel, t_store_hit, t_store_miss_encode
+from repro.serving.kvstore import CloudKVStore, DevicePrefixCache
+
+
+# ---------------------------------------------------------------------------
+# content identity
+# ---------------------------------------------------------------------------
+
+def _chain(blocks):
+    ids, prev = [], 0
+    for b in blocks:
+        prev = span_content_id(b, prev)
+        ids.append(prev)
+    return ids
+
+
+def test_span_ids_are_prefix_closed():
+    """Two requests sharing their first k blocks share exactly their
+    first k span ids; one divergent block changes every id after it."""
+    a = _chain([b"sys-prompt", b"doc-1", b"turn-a"])
+    b = _chain([b"sys-prompt", b"doc-1", b"turn-b"])
+    assert a[:2] == b[:2]
+    assert a[2] != b[2]
+    c = _chain([b"sys-prompt", b"doc-2", b"turn-a"])
+    assert c[0] == a[0]
+    assert c[1] != a[1] and c[2] != a[2]    # divergence poisons the tail
+
+
+def test_span_id_depends_on_position_via_chain():
+    """The same block bytes at a different chain position get a
+    different id (position is encoded by the predecessor hash)."""
+    assert _chain([b"x", b"x"])[0] != _chain([b"x", b"x"])[1]
+    assert span_content_id(b"x", 0) == span_content_id(b"x", 0)
+
+
+def test_chunk_keys_distinct_across_every_shaping_param():
+    """Identical token spans encoded at different bits / chunkings /
+    layers / heads / models are different artifacts: no two of the
+    perturbed keys may alias the base key or each other."""
+    sid = span_content_id(b"shared-prefix")
+    base = dict(model="sparkv-qwen3-4b", bits=8, chunk_tokens=1024, head=0)
+    keys = {
+        "base": chunk_content_key(sid, 3, **base),
+        "bits": chunk_content_key(sid, 3, **{**base, "bits": 4}),
+        "chunking": chunk_content_key(sid, 3, **{**base,
+                                                 "chunk_tokens": 512}),
+        "layer": chunk_content_key(sid, 4, **base),
+        "head": chunk_content_key(sid, 3, **{**base, "head": 1}),
+        "model": chunk_content_key(sid, 3, **{**base,
+                                              "model": "sparkv-llama-8b"}),
+        "span": chunk_content_key(span_content_id(b"other-prefix"), 3,
+                                  **base),
+    }
+    assert len(set(keys.values())) == len(keys)
+    # and the key function itself is deterministic across calls
+    assert keys["base"] == chunk_content_key(sid, 3, **base)
+
+
+# ---------------------------------------------------------------------------
+# store behavior
+# ---------------------------------------------------------------------------
+
+def test_store_lru_evicts_least_recently_used():
+    s = CloudKVStore(KVStoreModel(capacity_bytes=3.0, policy="lru"))
+    for k in (1, 2, 3):
+        assert s.insert(k, 1.0) == []
+    assert s.lookup(1)                      # refresh 1: 2 is now coldest
+    assert s.insert(4, 1.0) == [2]
+    assert set(s._res) == {1, 3, 4}
+
+
+def test_store_lfu_evicts_least_frequently_used():
+    s = CloudKVStore(KVStoreModel(capacity_bytes=3.0, policy="lfu"))
+    for k in (1, 2, 3):
+        s.insert(k, 1.0)
+    for _ in range(3):
+        s.lookup(1)
+    s.lookup(3)
+    assert s.insert(4, 1.0) == [2]          # 2 has the lowest use count
+    assert set(s._res) == {1, 3, 4}
+
+
+def test_store_refuses_oversized_and_counts_it():
+    s = CloudKVStore(KVStoreModel(capacity_bytes=2.0))
+    assert s.insert(1, 5.0) == []
+    assert 1 not in s and s.n_refused == 1
+    assert s.ledger_balance() == 0.0
+
+
+def test_prefix_cache_match_counts_lookups():
+    c = DevicePrefixCache(capacity_bytes=None)
+    c.insert(10, 1.0)
+    c.insert(11, 1.0)
+    got = c.match([10, 11, 12])
+    assert got == {10, 11}
+    assert c.n_lookups == 3 and c.n_hits == 2 and c.n_misses == 1
+
+
+def test_hit_and_miss_cost_model():
+    """Hit cost = hit latency + transfer + device decode; the miss-side
+    encode surcharge is exactly zero at defaults (the bit-parity
+    guarantee) and positive once an encode stage is modeled."""
+    from repro.core.costs import PROFILES
+    prof = PROFILES["jetson-orin"]
+    store = KVStoreModel()
+    nbytes, bw = 2e6, 10e6
+    t = t_store_hit(nbytes, bw, prof, store)
+    assert t == pytest.approx(store.hit_latency_s + nbytes / bw
+                              + prof.t_proc(nbytes))
+    assert t_store_miss_encode(nbytes, store) == 0.0
+    slow = KVStoreModel(encode_fixed_s=0.01, encode_bw=100e6)
+    assert t_store_miss_encode(nbytes, slow) == \
+        pytest.approx(0.01 + nbytes / 100e6)
+
+
+# ---------------------------------------------------------------------------
+# hit fidelity: served bitstream decodes on the kv_dequant kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4, 3])
+def test_store_hit_roundtrips_through_dequant_kernel(bits):
+    """The artifact a hit serves is the encoded QuantizedTensor; the
+    device decodes it with the same Pallas kernel as a cold stream, so
+    kernel output must match the numpy dequantize reference."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.kv_dequant.ops import dequantize_chunk
+
+    rng = np.random.default_rng(7 + bits)
+    x = rng.standard_normal((64, 32)).astype(np.float32)
+    qt = quantize(x, bits, group=32)
+    ref = dequantize(qt)
+    out = np.asarray(dequantize_chunk(qt, out_dtype=jnp.float32))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)

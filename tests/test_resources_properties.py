@@ -13,13 +13,19 @@ mixes rather than hand-picked examples:
   - link topology monotonicity: adding a stage to a flow's path never
     makes it finish earlier (the bottleneck governs);
   - wait-telemetry consistency: recorded waits + service times tile the
-    makespan exactly on a capacity-1 FIFO queue.
+    makespan exactly on a capacity-1 FIFO queue;
+  - KV-store byte conservation: every byte the content-addressed store
+    ever accepts is exactly one of resident or evicted, lookups
+    partition into hits + misses, and residency never exceeds capacity
+    under any lookup/insert/remove interleaving (LRU and LFU).
 """
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.costs import MemoryModel, SharedLinkModel, NETWORKS
+from repro.core.costs import (KVStoreModel, MemoryModel, SharedLinkModel,
+                              NETWORKS)
 from repro.core.engine import BandwidthIntegrator
+from repro.serving.kvstore import CloudKVStore
 from repro.serving.memory import KVMemoryServer
 from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
                                      ScalarLinkTopology, single_link,
@@ -466,3 +472,82 @@ def test_memory_ledger_conservation(ops, policy, disk, cap_gb):
     assert abs(m.resident_total) < 1.0 and abs(m.disk_total) < 1.0
     assert np.isclose(m.charged_total, m.freed_total + m.dropped_total,
                       atol=1.0)
+
+
+# ---------------------------------------------------------------------------
+# CloudKVStore: byte-conservation ledger + counter consistency
+# ---------------------------------------------------------------------------
+
+_STORE_OP = st.tuples(st.integers(0, 3),      # insert/lookup/remove/look+ins
+                      st.integers(0, 15),     # content key
+                      st.floats(0.01, 2.0))   # artifact size (GB)
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.lists(_STORE_OP, min_size=1, max_size=60),
+       st.sampled_from(["lru", "lfu"]),
+       st.floats(0.5, 4.0),
+       st.booleans())
+def test_kvstore_ledger_and_counters(ops, policy, cap_gb, bounded):
+    """For any interleaving of lookup/insert/remove under LRU or LFU,
+    bounded or not: every byte ever accepted is exactly one of resident
+    or evicted (checked after every call), lookups partition into
+    hits + misses, residency never exceeds capacity, and the three
+    bookkeeping maps never drift apart."""
+    GB = 1e9
+    cap = cap_gb * GB if bounded else None
+    store = CloudKVStore(KVStoreModel(capacity_bytes=cap, policy=policy))
+    t = 0.0
+
+    def check():
+        assert abs(store.ledger_balance()) < 1.0
+        assert store.n_lookups == store.n_hits + store.n_misses
+        assert np.isclose(store.resident_bytes,
+                          sum(store._res.values()), atol=1.0)
+        if cap is not None:
+            assert store.resident_bytes <= cap + 1.0
+        assert len(store) == len(store._seq) == len(store._freq)
+        assert store.n_inserts - store.n_evictions - len(store) == 0
+
+    for op, key, size in ops:
+        t += 0.1
+        if op in (0, 3):
+            if op == 3:                     # miss-then-fill protocol
+                store.lookup(key, t)
+            was_resident = key in store
+            evicted = store.insert(key, size * GB, t)
+            for k in evicted:
+                assert k not in store
+            if not was_resident and cap is not None and size * GB > cap:
+                assert key not in store     # refused, counted
+        elif op == 1:
+            assert store.lookup(key, t) == (key in store)
+        else:
+            store.remove(key)
+            assert key not in store
+        check()
+    for k in list(store._res):              # drain: all bytes settle
+        store.remove(k)
+        check()
+    assert abs(store.resident_bytes) < 1.0
+    assert np.isclose(store.inserted_total, store.evicted_total, atol=1.0)
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=30),
+       st.integers(2, 5))
+def test_kvstore_lru_keeps_most_recent(touches, keep):
+    """Unit-size LRU at capacity `keep`: after any touch sequence the
+    resident set is exactly the last `keep` distinct keys touched."""
+    store = CloudKVStore(KVStoreModel(capacity_bytes=float(keep),
+                                      policy="lru"))
+    for t, key in enumerate(touches):
+        if not store.lookup(key, float(t)):
+            store.insert(key, 1.0, float(t))
+    expect = []
+    for key in reversed(touches):
+        if key not in expect:
+            expect.append(key)
+        if len(expect) == keep:
+            break
+    assert set(store._res) == set(expect)

@@ -3,6 +3,7 @@ parity: the EventQueue must reproduce bare-heapq semantics exactly
 (including batched insertion), SimStats must account run throughput, and
 `ServingCluster(link_core=...)` must produce *bit-identical* fleet
 reports on either core across disciplines × memory pressure."""
+import dataclasses
 import heapq
 import random
 
@@ -154,6 +155,37 @@ def test_cluster_records_sim_stats_globally():
     assert STATS.n_events == before[0] + cluster.last_sim_stats["n_events"]
     st = cluster.last_sim_stats
     assert st["n_heap_events"] + st["n_link_completions"] == st["n_events"]
+
+
+@pytest.mark.parametrize("core", ["vectorized", "scalar"])
+def test_kvstore_zero_overlap_is_bit_identical_to_disabled(core):
+    """Arming the content-addressed KV store on a trace whose content
+    ids never repeat (prefix_frac=0.0: every chain request-unique) must
+    leave the fleet report bit-identical to the store-disabled run on
+    either link core — the reuse layer prices misses at exactly zero.
+    The store still observes the traffic: all lookups count as misses."""
+    from repro.core.costs import KVStoreModel
+    from repro.serving.traffic import TrafficProfile, generate_trace
+
+    prof = TrafficProfile(rate_rps=2.0, n_devices=2, max_context=2048)
+    plain = generate_trace(prof, 12, seed=5)
+    zero = generate_trace(
+        dataclasses.replace(prof, prefix_pool=8, prefix_frac=0.0),
+        12, seed=5)
+    assert all(s.content_ids for s in zero)
+
+    def fleet(specs, kv):
+        return ServingCluster(
+            CFG, SP, "jetson-orin", "campus-wifi", n_devices=2,
+            max_concurrency=8, link_core=core, kvstore=kv).run(specs)
+
+    off = fleet(plain, None)
+    on = fleet(zero, KVStoreModel(capacity_bytes=1e9))
+    assert _fleet_fingerprint(off) == _fleet_fingerprint(on)
+    assert off.reuse is None
+    assert on.reuse["store"]["n_hits"] == 0
+    assert on.reuse["store"]["n_misses"] > 0
+    assert on.reuse["local_hits_total"] == 0
 
 
 def test_link_telemetry_off_preserves_latency_results():
