@@ -37,6 +37,7 @@ BENCHES = [
     ("quality", "benchmarks.bench_quality_validation"),
     ("roofline", "benchmarks.bench_roofline"),
     ("simcore", "benchmarks.bench_simcore"),
+    ("quant", "benchmarks.bench_quant"),
 ]
 
 

@@ -211,6 +211,13 @@ class SparKVConfig:
     w_immediate: float = 1.0
     w_potential: float = 1.0
     scheduler_mode: str = "paper"     # paper (t,l,h) | engine (t,l)
+    # per-chunk adaptive quantization: name of a
+    # repro.compression.allocate schedule. "uniform" (default) disarms
+    # the per-chunk machinery entirely — every trace is bit-identical to
+    # a build without it; "flat" arms the per-chunk accounting while
+    # still allocating quant_bits everywhere (byte-identical wire);
+    # "attention"/"aggressive" spend bits where the saliency is.
+    alloc_schedule: str = "uniform"
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,

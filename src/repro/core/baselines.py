@@ -26,16 +26,19 @@ from repro.configs.base import SparKVConfig
 from repro.core.chunks import Chunk, ChunkGrid
 from repro.core.controller import RuntimeController
 from repro.core.costs import (GroundTruthLatency, KVStoreModel,
-                              NetworkProfile, PROFILES, t_store_hit,
-                              t_stream)
+                              NetworkProfile, PROFILES, chunk_bytes_at_bits,
+                              t_store_hit, t_stream)
 from repro.core.engine import BandwidthIntegrator, HybridEngine
 from repro.core.predictor import LatencyPredictor
 from repro.core import scheduler as sched
 from repro.data.workloads import WorkloadChunks
 
 # bits -> relative response-quality of streamed KV (validated in
-# bench_quality_validation; paper operates at >= 0.9 F1)
-QUALITY_OF_BITS = {8: 1.0, 6: 0.997, 5: 0.992, 4: 0.968, 3: 0.89, 2: 0.72}
+# bench_quality_validation; paper operates at >= 0.9 F1). Total over
+# every width in 2..8: per-chunk allocation keys this map by arbitrary
+# snapped widths, and totality is the backstop for any pre-snap caller.
+QUALITY_OF_BITS = {8: 1.0, 7: 0.9985, 6: 0.997, 5: 0.992, 4: 0.968,
+                   3: 0.89, 2: 0.72}
 
 
 @dataclasses.dataclass
@@ -169,6 +172,34 @@ class RequestPlan:
     reuse_local: frozenset = frozenset()
     reuse_store: frozenset = frozenset()
     store_model: Optional[KVStoreModel] = None
+    # per-chunk adaptive quantization (Chunk -> BITRATE_LEVELS width).
+    # None = uniform plan, every consumer takes its exact pre-per-chunk
+    # path; set by plan_policy when SparKVConfig.alloc_schedule is armed
+    # and mutated by the cluster's SLO cold-chunk downgrade.
+    chunk_bits: Optional[dict] = None
+
+
+def chunk_bits_for(wl: WorkloadChunks, grid: ChunkGrid,
+                   spcfg: SparKVConfig,
+                   base_bits: Optional[int] = None) -> Optional[dict]:
+    """Per-chunk bit-widths for `wl` under the config's allocation
+    schedule, keyed by `grid` chunks — or None when the schedule is the
+    "uniform" sentinel (per-chunk machinery disarmed). The allocation is
+    a pure function of the workload's measured signals, so the reuse
+    layer's content keys and the planner compute identical widths
+    independently."""
+    name = getattr(spcfg, "alloc_schedule", "uniform")
+    if name == "uniform":
+        return None
+    from repro.compression.allocate import allocate_bits, schedule_of
+    base = spcfg.quant_bits if base_bits is None else base_bits
+    act, ent = wl.active_blocks, wl.entropy_bits
+    if grid.n_h == 1 and wl.n_h > 1:
+        # engine-granularity grid over a per-head workload: pool heads
+        act = act.sum(axis=2, keepdims=True)
+        ent = ent.mean(axis=1, keepdims=True)
+    arr = allocate_bits(act, ent, base, schedule_of(name))
+    return {c: int(arr[c.t, c.l, c.h]) for c in grid.chunks()}
 
 
 def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
@@ -201,6 +232,16 @@ def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
     elif policy == "kivi":
         bits = kivi_bits
         bmap = {c: v * bits / spcfg.quant_bits for c, v in bmap.items()}
+    chunk_bits = chunk_bits_for(wl, grid, spcfg, base_bits=bits)
+    if chunk_bits is not None:
+        # per-chunk adaptive allocation: re-express each chunk's wire
+        # bytes at its allocated width. Chunks held at the base width
+        # keep their bytes verbatim — v*b/b is not an exact roundtrip
+        # for non-power-of-two widths, and the "flat" schedule must be
+        # bit-identical to the uniform plan
+        bmap = {c: (v if chunk_bits[c] == bits
+                    else chunk_bytes_at_bits(v, bits, chunk_bits[c]))
+                for c, v in bmap.items()}
     planner = Planner.build(cfg, grid, bmap, amap, profile_name, net, spcfg,
                             util=util)
     if reuse is not None and (reuse.local or reuse.store):
@@ -237,17 +278,42 @@ def plan_policy(policy: str, cfg, wl: WorkloadChunks, profile_name: str,
                        context_len=wl.context_len,
                        reuse_local=(reuse.local if reuse else frozenset()),
                        reuse_store=(reuse.store if reuse else frozenset()),
-                       store_model=(reuse.model if reuse else None))
+                       store_model=(reuse.model if reuse else None),
+                       chunk_bits=chunk_bits)
 
 
-def _mixed_quality(res, bits: int) -> float:
-    # reused chunks carry streamed fidelity: the cached artifact was
-    # encoded at the same quantization level as a fresh stream
+def _mixed_quality(res, bits: int, *, chunk_bits: Optional[dict] = None,
+                   active_map: Optional[dict] = None) -> float:
+    """Response-quality score of one executed request.
+
+    Uniform plans (chunk_bits None): the unweighted mix — computed
+    chunks exact, streamed/reused chunks at QUALITY_OF_BITS[bits].
+
+    Per-chunk plans: the *saliency-weighted* mix over the whole grid,
+    each non-computed chunk at its own width's fidelity, weighted by the
+    attention mass actually reading it (`active_map`). The weighting is
+    the point of per-chunk allocation: QUALITY_OF_BITS is concave in
+    bits, so an unweighted mean always favors uniform widths — but a
+    response's fidelity is dominated by the chunks attention reads,
+    which is exactly where the allocator spends the bits.
+    """
     n_reused = getattr(res, "n_reused", 0)
-    n = res.n_streamed + res.n_computed + n_reused
-    q_stream = QUALITY_OF_BITS[bits]
-    return (res.n_computed * 1.0
-            + (res.n_streamed + n_reused) * q_stream) / max(n, 1)
+    if chunk_bits is None:
+        # reused chunks carry streamed fidelity: the cached artifact was
+        # encoded at the same quantization level as a fresh stream
+        n = res.n_streamed + res.n_computed + n_reused
+        q_stream = QUALITY_OF_BITS[bits]
+        return (res.n_computed * 1.0
+                + (res.n_streamed + n_reused) * q_stream) / max(n, 1)
+    computed = getattr(res, "computed_set", None) or set()
+    wsum = qsum = 0.0
+    for c, b in chunk_bits.items():
+        w = float(active_map.get(c, 1.0)) if active_map else 1.0
+        w = max(w, 1e-9)
+        q = 1.0 if c in computed else QUALITY_OF_BITS[b]
+        wsum += w
+        qsum += w * q
+    return qsum / max(wsum, 1e-12)
 
 
 def _run_plan(plan: RequestPlan, cfg, profile_name, net, spcfg, *,
@@ -262,8 +328,10 @@ def _run_plan(plan: RequestPlan, cfg, profile_name, net, spcfg, *,
     elif plan.policy == "cachegen":
         extras["bits"] = plan.quality_bits
     return PipelineResult(plan.policy, res.ttft_s, res.energy["total_j"],
-                          _mixed_quality(res, plan.quality_bits), res,
-                          extras)
+                          _mixed_quality(res, plan.quality_bits,
+                                         chunk_bits=plan.chunk_bits,
+                                         active_map=plan.active_map),
+                          res, extras)
 
 
 def run_sparkv(cfg, wl: WorkloadChunks, profile_name: str,

@@ -277,6 +277,11 @@ class MemoryModel:
     resident_bits : bit-width resident KV is accounted at before any
         evict-to-lower-bits downgrade (16 = bf16, the engine's decode
         cost model assumption).
+    cold_frac : the "bits" policy's cold-pool fraction — the share of a
+        victim's resident KV (its low-saliency chunks) requantized
+        first under pressure; the hot remainder only degrades once the
+        cold pool reaches the ladder floor. 1.0 (default) downgrades
+        the whole resident at once, exactly the pre-cold-pool behavior.
     """
     capacity_bytes: Optional[float] = None
     policy: str = "lru"
@@ -284,6 +289,12 @@ class MemoryModel:
     reload: str = "planner"
     gate_frac: Optional[float] = None
     resident_bits: int = 16
+    # fraction of a resident's KV treated as cold (low-saliency) by the
+    # "bits" eviction policy: pressure downgrades only the cold pool
+    # until it hits the ladder floor, then the hot remainder. 1.0
+    # (default) downgrades the whole resident at once — the exact
+    # pre-cold-pool behavior.
+    cold_frac: float = 1.0
 
     def __post_init__(self):
         assert self.capacity_bytes is None or self.capacity_bytes > 0
@@ -294,6 +305,7 @@ class MemoryModel:
             assert self.disk in DISK_TIERS, self.disk
         assert self.gate_frac is None or 0 < self.gate_frac
         assert self.resident_bits > 0
+        assert 0.0 < self.cold_frac <= 1.0, self.cold_frac
 
     @property
     def disk_profile(self) -> Optional[DiskTierProfile]:
@@ -442,6 +454,17 @@ class GroundTruthLatency:
 def t_stream(chunk_bytes: float, mean_bw: float, profile) -> float:
     """Paper: t_stream(c) = b_c / bw-bar + t_proc(c)."""
     return chunk_bytes / mean_bw + profile.t_proc(chunk_bytes)
+
+
+def chunk_bytes_at_bits(nbytes: float, from_bits: float,
+                        to_bits: float) -> float:
+    """Wire/resident bytes of a chunk re-expressed at another
+    quantization width: payload scales linearly in bits (the per-group
+    header share is folded in — it is <2% at the measured group sizes).
+    The single byte<->bits model every per-chunk-bits consumer (planner
+    scaling, SLO cold downgrade, memory requantization) shares, so their
+    accounting can never drift apart."""
+    return nbytes * to_bits / from_bits
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,52 @@ def _kernel(c_ref, s_ref, z_ref, o_ref, *, group: int):
     o_ref[...] = x.reshape(rows, width).astype(o_ref.dtype)
 
 
+def _mixed_kernel(c_ref, s_ref, z_ref, b_ref, o_ref, *, group: int):
+    rows, width = c_ref.shape
+    g = width // group
+    c = c_ref[...].astype(jnp.float32).reshape(rows, g, group)
+    # per-row bits plane selects the scale interpretation: s_ref holds
+    # the bit-width-independent per-group value SPAN (hi - lo), and the
+    # row's width turns it into the affine step span / (2^bits - 1) —
+    # one launch dequantizes rows of heterogeneous widths
+    q = ((1 << b_ref[...].astype(jnp.int32)) - 1).astype(jnp.float32)
+    step = s_ref[...] / q                       # (rows, g) / (rows, 1)
+    x = c * step[..., None] + z_ref[...][..., None]
+    o_ref[...] = x.reshape(rows, width).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "rows_blk", "interpret",
+                                    "out_dtype"))
+def kv_dequant_mixed(codes, spans, zeros, bits, *, group: int = 64,
+                     rows_blk: int = 256, interpret: bool = True,
+                     out_dtype=jnp.bfloat16):
+    """Mixed-bitwidth variant: rows may carry different quantization
+    widths. codes: (n, width) uint8, width % group == 0; spans/zeros:
+    (n, width//group) float32 per-group value range / offset; bits:
+    (n, 1) int32 per-row widths. A row's step is spans / (2^bits - 1) —
+    computed in fp32, so a uniform-bits launch is bit-identical to
+    `kv_dequant` fed the host-computed scales (same IEEE division)."""
+    n, width = codes.shape
+    g = width // group
+    rows_blk = min(rows_blk, n)
+    grid = (-(-n // rows_blk),)
+    kern = functools.partial(_mixed_kernel, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_blk, width), lambda i: (i, 0)),
+            pl.BlockSpec((rows_blk, g), lambda i: (i, 0)),
+            pl.BlockSpec((rows_blk, g), lambda i: (i, 0)),
+            pl.BlockSpec((rows_blk, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_blk, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, width), out_dtype),
+        interpret=interpret,
+    )(codes, spans, zeros, bits)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("group", "rows_blk", "interpret",
                                     "out_dtype"))

@@ -14,3 +14,17 @@ def kv_dequant_ref(codes, scales, zeros, *, group: int,
     c = codes.astype(jnp.float32).reshape(n, g, group)
     x = c * scales[..., None] + zeros[..., None]
     return x.reshape(n, width).astype(out_dtype)
+
+
+def kv_dequant_mixed_ref(codes, spans, zeros, bits, *, group: int,
+                         out_dtype=jnp.bfloat16):
+    """Mixed-bitwidth oracle: per-row `bits` (n, 1) int32 selects the
+    scale interpretation spans / (2^bits - 1); otherwise identical to
+    kv_dequant_ref."""
+    n, width = codes.shape
+    g = width // group
+    c = codes.astype(jnp.float32).reshape(n, g, group)
+    q = ((1 << bits.astype(jnp.int32)) - 1).astype(jnp.float32)
+    step = spans / q
+    x = c * step[..., None] + zeros[..., None]
+    return x.reshape(n, width).astype(out_dtype)

@@ -89,7 +89,8 @@ from repro.core import baselines as B
 from repro.core.chunks import Chunk, ChunkGrid, chunk_content_key
 from repro.core.costs import (GroundTruthLatency, KVStoreModel, MemoryModel,
                               NetworkProfile, PROFILES,
-                              NETWORKS, RunQueueModel, SharedLinkModel)
+                              NETWORKS, RunQueueModel, SharedLinkModel,
+                              chunk_bytes_at_bits)
 from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
                                DecodeDone, DecodeStart, DecodeTick,
                                HybridEngine, StartAck, StoreHit, StreamStart,
@@ -1044,9 +1045,16 @@ class ServingCluster:
                              == "paper" and wl.n_h > 1) else 1
             grid = ChunkGrid(n_t=wl.n_t, n_l=wl.n_l, n_h=n_h)
             ids = spec.content_ids
+            # per-chunk allocation folds into the content key: a chunk
+            # cached at 6 bits is a different artifact than the same
+            # span at 4 — chunk_bits_for is pure on the workload's
+            # measured signals, so it lands on exactly the widths
+            # plan_policy will allocate (None when disarmed: every key
+            # uses the uniform width, the pre-per-chunk keys verbatim)
+            cb = B.chunk_bits_for(wl, grid, self.spcfg)
             key_of = {c: chunk_content_key(
                 ids[c.t], c.l, model=self.cfg.name,
-                bits=self.spcfg.quant_bits,
+                bits=(cb[c] if cb is not None else self.spcfg.quant_bits),
                 chunk_tokens=self.spcfg.chunk_tokens, head=c.h)
                 for c in grid.chunks() if c.t < len(ids)}
             local_keys = self._prefix[spec.device].match(key_of.values())
@@ -1308,12 +1316,36 @@ class ServingCluster:
                                            pred_tpot_s=dec.pred_tpot_s))
                     return False
                 if dec.bits < plan.quality_bits:
-                    # coarser stream quantization: fewer bytes on the
-                    # wire at QUALITY_OF_BITS[dec.bits] fidelity
-                    scale = dec.bits / plan.quality_bits
-                    plan.bytes_map = {c: v * scale
-                                      for c, v in plan.bytes_map.items()}
-                    plan.quality_bits = dec.bits
+                    cold = dec.cold_chunks
+                    if cold is None and plan.chunk_bits is not None:
+                        # whole-request downgrade of a per-chunk plan:
+                        # same per-chunk arithmetic, cold set = everyone
+                        cold = frozenset(plan.chunk_bits)
+                    if cold is not None:
+                        # cold-chunk downgrade: only the low-saliency
+                        # chunks drop to dec.bits (never upward); hot
+                        # chunks keep their width and their fidelity
+                        cb = dict(plan.chunk_bits) if plan.chunk_bits \
+                            else {c: plan.quality_bits
+                                  for c in plan.grid.chunks()}
+                        bmap = dict(plan.bytes_map)
+                        for c in cold:
+                            b_c = cb.get(c, plan.quality_bits)
+                            nb = min(b_c, dec.bits)
+                            if nb < b_c:
+                                bmap[c] = chunk_bytes_at_bits(
+                                    bmap[c], b_c, nb)
+                                cb[c] = nb
+                        plan.bytes_map = bmap
+                        plan.chunk_bits = cb
+                    else:
+                        # coarser stream quantization: fewer bytes on
+                        # the wire at QUALITY_OF_BITS[dec.bits] fidelity
+                        scale = dec.bits / plan.quality_bits
+                        plan.bytes_map = {c: v * scale
+                                          for c, v in
+                                          plan.bytes_map.items()}
+                        plan.quality_bits = dec.bits
                     downgraded = True
                 if (self.run_queue is not None
                         and self.run_queue.discipline == "wfq"
@@ -1410,7 +1442,9 @@ class ServingCluster:
                     m.release(st.rid, now)
                     if self._kvstore is not None:
                         prefix_unindex(st.spec.device, st.rid, forget=True)
-            quality = B._mixed_quality(res, st.plan.quality_bits)
+            quality = B._mixed_quality(res, st.plan.quality_bits,
+                                       chunk_bits=st.plan.chunk_bits,
+                                       active_map=st.plan.active_map)
             ttft = res.ttft_s - arrival_s[st.rid]
             ttlt = res.ttlt_s - arrival_s[st.rid]
             met = None

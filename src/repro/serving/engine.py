@@ -37,7 +37,8 @@ from repro.core import baselines as B
 from repro.core.chunks import Chunk
 from repro.core.costs import NETWORKS
 from repro.data.workloads import WorkloadChunks
-from repro.kernels.kv_dequant.ops import dequantize_chunk
+from repro.kernels.kv_dequant.ops import (dequantize_chunk,
+                                          dequantize_chunks_mixed)
 from repro.models.api import Model
 
 
@@ -88,7 +89,17 @@ class SparKVServer:
 
     # ---------------- cloud side ----------------
     def register_context(self, tokens: np.ndarray) -> int:
-        """Precompute exact KV + compressed chunk artifacts (cloud)."""
+        """Precompute exact KV + compressed chunk artifacts (cloud).
+
+        With ``spcfg.alloc_schedule`` armed, the artifacts are encoded
+        at per-chunk widths: a first base-width quantization pass
+        measures the entropy signal (``huffman.entropy_bits`` of the
+        real code planes — this also populates the workload's
+        ``entropy_bits``, which was a zero placeholder), the allocator
+        turns (attention mass x entropy) saliency into per-chunk bits,
+        and any chunk allocated off the base width is re-quantized at
+        its own width before entropy coding. The "uniform" sentinel
+        takes the single-pass path unchanged."""
         cfg = self.model.cfg
         assert tokens.shape[0] == 1, "one context per registration"
         s = tokens.shape[1]
@@ -100,29 +111,55 @@ class SparKVServer:
         v = np.asarray(cache["v"], np.float32)
         n_t, n_l = s // ct, cfg.num_layers
 
-        encoded = {}
-        chunk_bytes = np.zeros((n_t, n_l, 1))
+        # pass 1: base-width quantization + the measured entropy signal
+        quant = {}
+        ent = np.zeros((n_l, 1))
         for t in range(n_t):
             for l in range(n_l):
                 kc = k[l, 0, t * ct:(t + 1) * ct]
                 vc = v[l, 0, t * ct:(t + 1) * ct]
                 qk = quantize(kc, self.spcfg.quant_bits, self.spcfg.quant_group)
                 qv = quantize(vc, self.spcfg.quant_bits, self.spcfg.quant_group)
-                ek = huffman.encode(qk.codes, 1 << qk.bits, n_streams=64)
-                ev = huffman.encode(qv.codes, 1 << qv.bits, n_streams=64)
-                c = Chunk(t, l, 0)
-                encoded[c] = (ek, ev, qk, qv)
-                chunk_bytes[t, l, 0] = (ek.payload_bytes()
+                quant[Chunk(t, l, 0)] = (qk, qv)
+                ent[l, 0] += (huffman.entropy_bits(qk.codes, 1 << qk.bits)
+                              + huffman.entropy_bits(qv.codes, 1 << qv.bits)
+                              ) / (2 * n_t)
+
+        # per-chunk allocation: re-quantize off-base chunks at their own
+        # width (the "flat" schedule allocates base everywhere, so the
+        # artifacts stay byte-identical to an unarmed registration)
+        active = self._measure_active_blocks(tokens, n_t, n_l)
+        if getattr(self.spcfg, "alloc_schedule", "uniform") != "uniform":
+            from repro.compression.allocate import (allocate_bits,
+                                                    schedule_of)
+            bits_arr = allocate_bits(
+                active, ent, self.spcfg.quant_bits,
+                schedule_of(self.spcfg.alloc_schedule))
+            for c, (qk, qv) in list(quant.items()):
+                b = int(bits_arr[c.t, c.l, 0])
+                if b != self.spcfg.quant_bits:
+                    kc = k[c.l, 0, c.t * ct:(c.t + 1) * ct]
+                    vc = v[c.l, 0, c.t * ct:(c.t + 1) * ct]
+                    quant[c] = (quantize(kc, b, self.spcfg.quant_group),
+                                quantize(vc, b, self.spcfg.quant_group))
+
+        encoded = {}
+        chunk_bytes = np.zeros((n_t, n_l, 1))
+        for c, (qk, qv) in quant.items():
+            ek = huffman.encode(qk.codes, 1 << qk.bits, n_streams=64)
+            ev = huffman.encode(qv.codes, 1 << qv.bits, n_streams=64)
+            encoded[c] = (ek, ev, qk, qv)
+            chunk_bytes[c.t, c.l, 0] = (ek.payload_bytes()
                                         + ev.payload_bytes()
                                         + qk.header_bytes()
                                         + qv.header_bytes())
 
         # measured chunk stats drive the scheduler (real bytes; active
-        # blocks from the block-importance mask on the real q/k)
-        active = self._measure_active_blocks(tokens, n_t, n_l)
+        # blocks from the block-importance mask on the real q/k; real
+        # code-plane entropy feeds the bit allocator's saliency)
         wl = WorkloadChunks(
             n_t=n_t, n_l=n_l, n_h=1, active_blocks=active,
-            entropy_bits=np.zeros((n_l, 1)), chunk_bytes=chunk_bytes,
+            entropy_bits=ent, chunk_bytes=chunk_bytes,
             head_pattern=np.zeros((n_l, 1), np.int64),
             context_len=s, chunk_tokens=ct)
         cid = self._next_id
@@ -173,7 +210,8 @@ class SparKVServer:
         k = st.exact_k.copy()
         v = st.exact_v.copy()
         ct = self.chunk_tokens
-        streamed = getattr(eng, "streamed_set", set())
+        streamed = sorted(getattr(eng, "streamed_set", set()))
+        decoded = []
         for c in streamed:
             ek, ev, qk, qv = st.encoded[c]
             dk = huffman.decode(ek)
@@ -181,10 +219,24 @@ class SparKVServer:
             assert np.array_equal(dk, qk.codes), "bitstream corruption"
             qk2 = dataclasses.replace(qk, codes=dk.astype(np.uint8))
             qv2 = dataclasses.replace(qv, codes=dv.astype(np.uint8))
-            kd = np.asarray(dequantize_chunk(qk2, out_dtype=jnp.float32))
-            vd = np.asarray(dequantize_chunk(qv2, out_dtype=jnp.float32))
-            k[c.l, 0, c.t * ct:(c.t + 1) * ct] = kd
-            v[c.l, 0, c.t * ct:(c.t + 1) * ct] = vd
+            decoded.append((c, qk2, qv2))
+        if len({q.bits for _, qk2, qv2 in decoded
+                for q in (qk2, qv2)}) > 1:
+            # per-chunk adaptive widths: one mixed-bitwidth launch over
+            # every streamed chunk (exact-parity-tested against the
+            # per-chunk path, so policy never changes the assembled KV)
+            outs = dequantize_chunks_mixed(
+                [q for _, qk2, qv2 in decoded for q in (qk2, qv2)],
+                out_dtype=jnp.float32)
+            for (c, _, _), kd, vd in zip(decoded, outs[0::2], outs[1::2]):
+                k[c.l, 0, c.t * ct:(c.t + 1) * ct] = np.asarray(kd)
+                v[c.l, 0, c.t * ct:(c.t + 1) * ct] = np.asarray(vd)
+        else:
+            for c, qk2, qv2 in decoded:
+                kd = np.asarray(dequantize_chunk(qk2, out_dtype=jnp.float32))
+                vd = np.asarray(dequantize_chunk(qv2, out_dtype=jnp.float32))
+                k[c.l, 0, c.t * ct:(c.t + 1) * ct] = kd
+                v[c.l, 0, c.t * ct:(c.t + 1) * ct] = vd
         cache = {"k": jnp.asarray(k, jnp.bfloat16),
                  "v": jnp.asarray(v, jnp.bfloat16)}
         return cache, res

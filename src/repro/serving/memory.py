@@ -27,7 +27,11 @@ gap with a :class:`KVMemoryServer` per device:
     (evict-to-lower-bits): the victim's resident KV is requantized down
     the ``compression.quantize.BITRATE_LEVELS`` ladder *in place* —
     shrinking without suspending the sequence — and only demoted or
-    dropped at the ladder floor. Assembling requests are never victims;
+    dropped at the ladder floor. With ``MemoryModel.cold_frac < 1`` the
+    requantization is cold-pool-first: only the victim's low-saliency
+    share of resident KV walks the ladder until it floors; the hot
+    remainder (what attention actually reads at decode) degrades last.
+    Assembling requests are never victims;
     when no victim fits the server over-commits rather than deadlock.
   - **reload planning** — an evicted sequence that reaches its next
     decode dispatch emits a ``repro.core.engine.KVReload`` and
@@ -85,8 +89,8 @@ class EvictionEvent:
 @dataclasses.dataclass
 class _Resident:
     rid: int
-    bytes: float = 0.0            # DRAM-resident KV
-    bits: int = 16                # current resident quantization width
+    bytes: float = 0.0            # DRAM-resident KV (hot + cold pools)
+    bits: int = 16                # hot-pool quantization width
     disk_bytes: float = 0.0       # demoted copy on the disk tier
     evicted_bytes: float = 0.0    # resident bytes at demotion/drop time
     t_last_use: float = 0.0
@@ -94,6 +98,11 @@ class _Resident:
     evicted: bool = False         # demoted/dropped: needs reload
     reloading: bool = False
     parked: bool = False          # finalized; kept for prefix reuse
+    # cold-pool split for the "bits" policy with cold_frac < 1: the
+    # low-saliency share of the resident KV, downgraded first
+    cold_bytes: float = 0.0
+    cold_bits: int = 16
+    split: bool = False           # cold pool carved out yet
 
 
 class KVMemoryServer:
@@ -371,21 +380,67 @@ class KVMemoryServer:
             self.retire(r.rid, t)
             return EvictionEvent(r.rid, "retire", freed, bits, t)
         if self.model.policy == "bits":
-            lower = [b for b in BITRATE_LEVELS if b < r.bits]
-            if lower:
-                new_bits = lower[0]
-                new_bytes = r.bytes * new_bits / r.bits
-                freed = r.bytes - new_bytes
-                r.bytes = new_bytes
-                r.bits = new_bits
-                self.freed_total += freed
-                self.resident_total -= freed
-                self.n_downgrades += 1
-                self._record(t)
-                return EvictionEvent(r.rid, "downgrade", freed, new_bits, t)
+            frac = getattr(self.model, "cold_frac", 1.0)
+            if frac >= 1.0:
+                # whole-resident downgrade (the pre-cold-pool behavior,
+                # kept verbatim for bit-parity at the default)
+                lower = [b for b in BITRATE_LEVELS if b < r.bits]
+                if lower:
+                    new_bits = lower[0]
+                    new_bytes = r.bytes * new_bits / r.bits
+                    freed = r.bytes - new_bytes
+                    r.bytes = new_bytes
+                    r.bits = new_bits
+                    self.freed_total += freed
+                    self.resident_total -= freed
+                    self.n_downgrades += 1
+                    self._record(t)
+                    return EvictionEvent(r.rid, "downgrade", freed,
+                                         new_bits, t)
+            else:
+                # cold-pool-first requantization: carve the resident
+                # into hot/cold at the model's cold fraction once, then
+                # walk only the cold pool down the ladder; the hot pool
+                # (the chunks attention actually reads) degrades only
+                # after the cold pool hits the floor
+                if not r.split:
+                    r.cold_bytes = r.bytes * frac
+                    r.cold_bits = r.bits
+                    r.split = True
+                lower = [b for b in BITRATE_LEVELS if b < r.cold_bits]
+                if lower and r.cold_bytes > 0:
+                    new_bits = lower[0]
+                    new_cold = r.cold_bytes * new_bits / r.cold_bits
+                    freed = r.cold_bytes - new_cold
+                    r.cold_bytes = new_cold
+                    r.cold_bits = new_bits
+                    r.bytes -= freed
+                    self.freed_total += freed
+                    self.resident_total -= freed
+                    self.n_downgrades += 1
+                    self._record(t)
+                    return EvictionEvent(r.rid, "downgrade", freed,
+                                         new_bits, t)
+                lower = [b for b in BITRATE_LEVELS if b < r.bits]
+                if lower:
+                    new_bits = lower[0]
+                    hot = r.bytes - r.cold_bytes
+                    new_hot = hot * new_bits / r.bits
+                    freed = hot - new_hot
+                    r.bits = new_bits
+                    r.bytes -= freed
+                    self.freed_total += freed
+                    self.resident_total -= freed
+                    self.n_downgrades += 1
+                    self._record(t)
+                    return EvictionEvent(r.rid, "downgrade", freed,
+                                         new_bits, t)
         freed = r.bytes
         r.evicted_bytes = r.bytes
         r.bytes = 0.0
+        r.cold_bytes = 0.0
+        r.cold_bits = r.bits
+        r.split = False
         r.evicted = True
         self.resident_total -= freed
         self.n_evictions += 1

@@ -16,7 +16,10 @@ mechanisms the cluster composes on top of the resource servers:
     the request's KV stream down the quantization bitrate ladder
     (``repro.compression.quantize.downgrade_ladder``: fewer bits, fewer
     bytes, lower fidelity — the "don't waste bits" degradation lever);
-    if even the coarsest level misses, the request is shed (rejected)
+    with ``SLOPolicy.cold_frac > 0`` the ladder applies to only the
+    request's *cold* (low-attention-mass) chunks first, so the hot
+    chunks the response actually depends on keep their fidelity. If
+    even the coarsest level misses, the request is shed (rejected)
     instead of poisoning everyone's tail.
   - **Deadline-derived WFQ weights** — :meth:`SLOPolicy.weight_for_slack`
     maps deadline slack at admission to the ``DeviceRunQueue`` weight
@@ -73,6 +76,13 @@ class SLOPolicy:
         untouched should disable the mapping with ``weight_bins=()``).
     base_weight : weight for requests with slack beyond every bin (and
         the effective weight of deadline-less requests).
+    cold_frac : fraction of a request's chunks (coldest by attention
+        mass) the downgrade ladder applies to before touching the rest:
+        a predicted violation first walks the ladder over only the cold
+        set — the hot chunks the response actually depends on keep
+        their width — and falls back to the whole-request walk when
+        even cold-only at the coarsest level misses. 0.0 (default) is
+        the legacy whole-request downgrade, bit-identical.
     """
     downgrade: bool = True
     shed: bool = True
@@ -80,6 +90,7 @@ class SLOPolicy:
     headroom: float = 1.0
     weight_bins: tuple = ((2.0, 8.0), (5.0, 4.0))
     base_weight: float = 1.0
+    cold_frac: float = 0.0
 
     def weight_for_slack(self, slack_s: float) -> float:
         """WFQ weight class for a request with `slack_s` of deadline
@@ -98,6 +109,9 @@ class AdmissionDecision:
     downgraded: bool = False
     reason: str = "ttft"        # which SLO leg decided ("ttft" | "tpot")
     pred_tpot_s: Optional[float] = None
+    # chunks the downgrade applies to (cold-chunk admission); None =
+    # whole-request downgrade, the legacy semantics
+    cold_chunks: Optional[frozenset] = None
 
 
 def plan_compute_seconds(plan) -> float:
@@ -110,7 +124,8 @@ def plan_compute_seconds(plan) -> float:
 
 
 def predict_ttft(plan, cluster, spec, now: float, *,
-                 bits: Optional[int] = None) -> float:
+                 bits: Optional[int] = None,
+                 cold: Optional[frozenset] = None) -> float:
     """Projected TTFT (arrival -> first token) if `spec` is admitted now.
 
     The projection is the planner's own cost model evaluated against the
@@ -150,7 +165,23 @@ def predict_ttft(plan, cluster, spec, now: float, *,
     feature, so the projection errs conservative under load: admitted
     deadline-class requests should actually meet their deadlines.
     """
-    factor = 1.0 if bits is None else bits / plan.quality_bits
+    chunk_bits = getattr(plan, "chunk_bits", None)
+
+    def _factor(c) -> float:
+        """Byte scaling of chunk `c` under the candidate downgrade:
+        `cold` restricts the downgrade to the cold set (hot chunks keep
+        their width), per-chunk plans downgrade each chunk from its OWN
+        width (never upward). The legacy projection — uniform plan,
+        whole-request downgrade — reduces to bits / plan.quality_bits
+        exactly."""
+        if bits is None:
+            return 1.0
+        if cold is not None and c not in cold:
+            return 1.0
+        b_c = chunk_bits.get(c, plan.quality_bits) if chunk_bits \
+            else plan.quality_bits
+        return min(b_c, bits) / b_c
+
     pred = getattr(cluster, "predictor", None)
     if pred is not None and not getattr(pred, "refreshed", False):
         pred = None
@@ -187,7 +218,7 @@ def predict_ttft(plan, cluster, spec, now: float, *,
             if c in reuse_local:
                 continue
             if c in reuse_store and store_model is not None:
-                t_stream += t_store_hit(plan.bytes_map[c] * factor,
+                t_stream += t_store_hit(plan.bytes_map[c] * _factor(c),
                                         bw_hit, cluster.profile,
                                         store_model)
                 continue
@@ -195,7 +226,7 @@ def predict_ttft(plan, cluster, spec, now: float, *,
             # bottleneck bandwidth (keeps admission in lockstep with
             # planning if the stream cost model evolves)
             t_stream += chunk_stream_seconds(
-                plan.bytes_map[c] * factor, bw_eff, cluster.profile)
+                plan.bytes_map[c] * _factor(c), bw_eff, cluster.profile)
     t_comp = plan_compute_seconds(plan)
     wait = pred.predict_wait_s(cluster.device_load(spec.device),
                                cluster.capacity,
@@ -274,6 +305,15 @@ def decide_admission(policy: SLOPolicy, plan, cluster, spec,
     return dec
 
 
+def cold_chunk_set(plan, frac: float) -> frozenset:
+    """The coldest `frac` of the plan's chunks by attention mass — the
+    chunks a quality downgrade hurts least, since attention barely
+    reads them. Deterministic (mass, chunk-id) order."""
+    chunks = sorted(plan.active_map,
+                    key=lambda c: (plan.active_map[c], c))
+    return frozenset(chunks[:int(len(chunks) * frac)])
+
+
 def _decide_ttft(policy: SLOPolicy, plan, cluster, spec,
                  now: float) -> AdmissionDecision:
     deadline = spec.deadline_s
@@ -285,6 +325,19 @@ def _decide_ttft(policy: SLOPolicy, plan, cluster, spec,
     ladder = policy.ladder if policy.ladder is not None \
         else downgrade_ladder(plan.quality_bits)
     if policy.downgrade:
+        if policy.cold_frac > 0.0:
+            # cold-chunk admission: walk the ladder over only the
+            # low-saliency chunks first — the hot chunks the response
+            # depends on keep their width
+            cold = cold_chunk_set(plan, policy.cold_frac)
+            if cold:
+                for bits in ladder:
+                    pred = predict_ttft(plan, cluster, spec, now,
+                                        bits=bits, cold=cold)
+                    if pred * policy.headroom <= deadline:
+                        return AdmissionDecision("admit", bits, pred,
+                                                 downgraded=True,
+                                                 cold_chunks=cold)
         for bits in ladder:
             pred = predict_ttft(plan, cluster, spec, now, bits=bits)
             if pred * policy.headroom <= deadline:

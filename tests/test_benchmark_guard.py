@@ -120,6 +120,14 @@ def test_reuse_bench_registered():
     assert "reuse" in _registered_save_names()
 
 
+def test_quant_bench_registered():
+    """The per-chunk adaptive quantization bench is wired into the
+    runner under the ``quant`` name and its save literal is
+    discoverable by the checked-in-results validator."""
+    assert ("quant", "benchmarks.bench_quant") in BENCHES
+    assert "quant" in _registered_save_names()
+
+
 def test_simcore_bench_registered():
     """The simulator-throughput bench is wired into the runner and its
     results file validates against the registry."""

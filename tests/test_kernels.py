@@ -13,9 +13,10 @@ from repro.kernels.block_sparse_attn.kernel import block_sparse_attention
 from repro.kernels.block_sparse_attn.ref import block_sparse_attention_ref
 from repro.kernels.decode_attn.kernel import decode_attention
 from repro.kernels.decode_attn.ref import decode_attention_ref
-from repro.kernels.kv_dequant.kernel import kv_dequant
-from repro.kernels.kv_dequant.ref import kv_dequant_ref
-from repro.kernels.kv_dequant.ops import dequantize_chunk
+from repro.kernels.kv_dequant.kernel import kv_dequant, kv_dequant_mixed
+from repro.kernels.kv_dequant.ref import kv_dequant_mixed_ref, kv_dequant_ref
+from repro.kernels.kv_dequant.ops import (dequantize_chunk,
+                                          dequantize_chunks_mixed)
 from repro.sparse.mask import block_scores, select_blocks
 
 KEYS = jax.random.split(jax.random.PRNGKey(7), 8)
@@ -111,6 +112,115 @@ def test_kv_dequant_vs_ref(n, width, group, bits, rng):
                          jnp.asarray(zeros), group=group,
                          out_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@pytest.mark.parametrize("n,width,group,rows_blk", [
+    (37, 128, 64, 16),    # 37 % 16 = 5: ragged final grid block
+    (255, 256, 64, 64),   # 255 % 64 = 63
+    (129, 128, 32, 128),  # one full block + a single ragged row
+    (5, 192, 64, 8),      # n < rows_blk entirely (rows_blk clamped)
+])
+def test_kv_dequant_ragged_grid(n, width, group, rows_blk, rng):
+    """n % rows_blk != 0: the final grid block is ragged; the kernel must
+    still match the oracle exactly on every row."""
+    bits = 5
+    codes = rng.integers(0, 1 << bits, size=(n, width)).astype(np.uint8)
+    g = width // group
+    scales = rng.uniform(0.01, 0.2, (n, g)).astype(np.float32)
+    zeros = rng.normal(size=(n, g)).astype(np.float32)
+    out = kv_dequant(jnp.asarray(codes), jnp.asarray(scales),
+                     jnp.asarray(zeros), group=group, rows_blk=rows_blk,
+                     interpret=True, out_dtype=jnp.float32)
+    ref = kv_dequant_ref(jnp.asarray(codes), jnp.asarray(scales),
+                         jnp.asarray(zeros), group=group,
+                         out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    # ragged tiling must be exactly the single-block launch (same kernel,
+    # no padding leakage into valid rows)
+    whole = kv_dequant(jnp.asarray(codes), jnp.asarray(scales),
+                       jnp.asarray(zeros), group=group, rows_blk=n,
+                       interpret=True, out_dtype=jnp.float32)
+    assert np.array_equal(np.asarray(out), np.asarray(whole))
+
+
+@pytest.mark.parametrize("n,width,group,rows_blk", [
+    (64, 128, 64, 32), (53, 256, 64, 16), (7, 128, 32, 256),
+])
+def test_kv_dequant_mixed_vs_ref(n, width, group, rows_blk, rng):
+    """Mixed-bitwidth kernel vs numpy/jnp oracle: heterogeneous per-row
+    widths, exact equality in fp32 (ragged grids included)."""
+    g = width // group
+    bits = rng.choice([3, 4, 5, 6, 8], size=(n, 1)).astype(np.int32)
+    codes = (rng.integers(0, 256, size=(n, width)) %
+             (1 << bits)).astype(np.uint8)
+    spans = rng.uniform(0.1, 4.0, (n, g)).astype(np.float32)
+    zeros = rng.normal(size=(n, g)).astype(np.float32)
+    out = kv_dequant_mixed(jnp.asarray(codes), jnp.asarray(spans),
+                           jnp.asarray(zeros), jnp.asarray(bits),
+                           group=group, rows_blk=rows_blk, interpret=True,
+                           out_dtype=jnp.float32)
+    ref = kv_dequant_mixed_ref(jnp.asarray(codes), jnp.asarray(spans),
+                               jnp.asarray(zeros), jnp.asarray(bits),
+                               group=group, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    whole = kv_dequant_mixed(jnp.asarray(codes), jnp.asarray(spans),
+                             jnp.asarray(zeros), jnp.asarray(bits),
+                             group=group, rows_blk=n, interpret=True,
+                             out_dtype=jnp.float32)
+    assert np.array_equal(np.asarray(out), np.asarray(whole))
+
+
+def test_kv_dequant_mixed_uniform_bits_parity(rng):
+    """A uniform-bits mixed launch is BIT-IDENTICAL to the single-bits
+    kernel fed the host-computed scales: the kernel's span / (2^b - 1)
+    is the same IEEE fp32 division quantize() performed on the host."""
+    n, width, group, b = 96, 256, 64, 5
+    g = width // group
+    codes = rng.integers(0, 1 << b, size=(n, width)).astype(np.uint8)
+    spans = rng.uniform(0.1, 4.0, (n, g)).astype(np.float32)
+    zeros = rng.normal(size=(n, g)).astype(np.float32)
+    scales = (spans / np.float32((1 << b) - 1)).astype(np.float32)
+    bits = np.full((n, 1), b, np.int32)
+    mixed = kv_dequant_mixed(jnp.asarray(codes), jnp.asarray(spans),
+                             jnp.asarray(zeros), jnp.asarray(bits),
+                             group=group, interpret=True,
+                             out_dtype=jnp.float32)
+    single = kv_dequant(jnp.asarray(codes), jnp.asarray(scales),
+                        jnp.asarray(zeros), group=group, interpret=True,
+                        out_dtype=jnp.float32)
+    assert np.array_equal(np.asarray(mixed), np.asarray(single))
+
+
+def test_dequantize_chunks_mixed_parity(rng):
+    """One mixed launch over chunks of heterogeneous widths returns, per
+    chunk, exactly the per-chunk single-bits launch (fp32) and stays
+    within rtol 1e-5 of the host dequantize at bf16."""
+    shapes = [(64, 48), (7, 33), (128, 64), (19, 5)]
+    widths = [8, 3, 5, 4]
+    qts = [quantize(rng.normal(size=s).astype(np.float32), b, 64)
+           for s, b in zip(shapes, widths)]
+    mixed = dequantize_chunks_mixed(qts, out_dtype=jnp.float32)
+    for qt, m in zip(qts, mixed):
+        single = np.asarray(dequantize_chunk(qt, out_dtype=jnp.float32))
+        assert np.array_equal(np.asarray(m), single)
+        np.testing.assert_allclose(np.asarray(m), dequantize(qt),
+                                   atol=1e-5)
+    mixed_bf = dequantize_chunks_mixed(qts, out_dtype=jnp.bfloat16)
+    for qt, m in zip(qts, mixed_bf):
+        np.testing.assert_allclose(np.asarray(m, np.float32),
+                                   dequantize(qt), rtol=1e-5,
+                                   atol=qt.scales.max() * 0.02 + 1e-2)
+
+
+def test_dequantize_chunks_mixed_legacy_spans(rng):
+    """Pre-spans QuantizedTensors (spans=None) still go through the
+    mixed path via reconstruction from scales."""
+    import dataclasses
+    qt = quantize(rng.normal(size=(32, 32)).astype(np.float32), 4, 64)
+    legacy = dataclasses.replace(qt, spans=None)
+    (m,) = dequantize_chunks_mixed([legacy], out_dtype=jnp.float32)
+    single = np.asarray(dequantize_chunk(qt, out_dtype=jnp.float32))
+    assert np.array_equal(np.asarray(m), single)
 
 
 @settings(max_examples=15, deadline=None, derandomize=True)

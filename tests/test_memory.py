@@ -149,6 +149,60 @@ def test_bits_policy_downgrades_in_place_then_demotes():
     assert abs(m.ledger_balance()) < 1.0
 
 
+def test_bits_cold_pool_downgrades_cold_share_first():
+    """cold_frac < 1: pressure requantizes only the victim's cold pool
+    until it floors; the hot remainder keeps its width (and the record's
+    bits_of stays the hot width)."""
+    m = _loaded_server(MemoryModel(capacity_bytes=3.0 * GB, policy="bits",
+                                   cold_frac=0.5, disk=None), n=3)
+    m.admit(3, 11.0)
+    evs = m.charge(3, 0.2 * GB, 11.0)
+    assert evs and evs[0].action == "downgrade"
+    # cold pool = 0.5 GB at 16 bits -> 8 bits frees exactly 0.25 GB
+    assert np.isclose(evs[0].freed_bytes, 0.25 * GB)
+    assert evs[0].bits == BITRATE_LEVELS[0]
+    assert m.bits_of(evs[0].rid) == 16     # hot pool untouched
+    assert abs(m.ledger_balance()) < 1.0
+    # keep crushing: the cold pool floors at 3 bits before any hot-pool
+    # downgrade, then the hot pool walks, then demote/drop
+    evs = m.charge(3, 3.5 * GB, 12.0)
+    seen_hot = [e for e in evs
+                if e.action == "downgrade" and m.bits_of(e.rid) < 16]
+    floored = [e for e in evs if e.action in ("demote", "drop")]
+    assert seen_hot or floored or m.resident_total > m.capacity
+    assert abs(m.ledger_balance()) < 1.0
+
+
+def test_bits_cold_frac_default_is_whole_resident():
+    """cold_frac defaults to 1.0 = the legacy whole-resident downgrade:
+    first eviction frees bytes * (1 - 8/16) in one step."""
+    assert MemoryModel().cold_frac == 1.0
+    m = _loaded_server(MemoryModel(capacity_bytes=3.0 * GB, policy="bits",
+                                   disk=None), n=3)
+    m.admit(3, 11.0)
+    evs = m.charge(3, 0.2 * GB, 11.0)
+    assert np.isclose(evs[0].freed_bytes, 0.5 * GB)
+    assert m.bits_of(evs[0].rid) == 8
+
+
+def test_bits_cold_pool_conservation_under_pressure_storm():
+    """The charged == resident + disk + dropped + freed ledger holds
+    through interleaved cold-pool downgrades, demotions and reloads."""
+    m = _loaded_server(MemoryModel(capacity_bytes=2.0 * GB, policy="bits",
+                                   cold_frac=0.3, disk="ufs-3.1"), n=2)
+    for i, extra in enumerate([0.5, 1.0, 2.0, 4.0]):
+        rid = 10 + i
+        m.admit(rid, 20.0 + i)
+        m.charge(rid, extra * GB, 20.0 + i)
+        m.mark_ready(rid, 20.0 + i)
+        assert abs(m.ledger_balance()) < 1.0
+    for rid in list(m._res):
+        if m.needs_reload(rid):
+            m.begin_reload(rid, 30.0)
+            m.finish_reload(rid, 31.0)
+            assert abs(m.ledger_balance()) < 1.0
+
+
 def test_bits_growth_lands_at_downgraded_width():
     m = _loaded_server(MemoryModel(capacity_bytes=3.0 * GB, policy="bits",
                                    disk=None), n=3)

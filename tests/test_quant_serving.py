@@ -1,0 +1,246 @@
+"""Per-chunk adaptive quantization through the serving stack: allocation
+schedules in plan_policy (bytes/chunk_bits threading), saliency-weighted
+quality, cold-chunk SLO admission, per-chunk content keys, the
+bit-parity guarantees of the "uniform"/"flat" schedules, and the mixed
+dequant path in concrete KV assembly."""
+import dataclasses
+
+import numpy as np
+
+from repro.compression.quantize import BITRATE_LEVELS
+from repro.configs import SparKVConfig, get_config
+from repro.core import baselines as B
+from repro.core.baselines import QUALITY_OF_BITS
+from repro.core.chunks import ChunkGrid
+from repro.core.costs import NETWORKS, RunQueueModel
+from repro.core.engine import BandwidthIntegrator
+from repro.data.workloads import DATASETS, synthesize
+from repro.serving.cluster import RequestSpec, ServingCluster
+from repro.serving.resources import DeviceRunQueue, single_link
+from repro.serving.slo import (SLOPolicy, cold_chunk_set, decide_admission,
+                               predict_ttft)
+
+CFG = get_config("sparkv-qwen3-4b")
+SP = SparKVConfig(scheduler_mode="engine")
+SP_FLAT = dataclasses.replace(SP, alloc_schedule="flat")
+SP_ATT = dataclasses.replace(SP, alloc_schedule="attention")
+NET = NETWORKS["campus-wifi"]
+CTX = 4096
+
+
+def _wl(ctx=CTX, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else None
+    return synthesize(CFG, ctx, DATASETS["longchat"],
+                      chunk_tokens=SP.chunk_tokens,
+                      quant_bits=SP.quant_bits, rng=rng)
+
+
+def _plan(spcfg, policy="cachegen", wl=None):
+    return B.plan_policy(policy, CFG, wl if wl is not None else _wl(),
+                         "jetson-orin", NET, spcfg, util=0.0)
+
+
+# ---------------------------------------------------------------------------
+# plan_policy threading
+# ---------------------------------------------------------------------------
+
+def test_uniform_schedule_builds_no_chunk_bits():
+    plan = _plan(SP)
+    assert plan.chunk_bits is None
+
+
+def test_flat_schedule_is_byte_identical_to_uniform():
+    """"flat" arms the accounting (chunk_bits everywhere) but allocates
+    the base width — wire bytes and stream costs must be bitwise equal
+    to the uniform plan's."""
+    wl = _wl()
+    pu = _plan(SP, wl=wl)
+    pf = _plan(SP_FLAT, wl=wl)
+    assert pf.chunk_bits is not None
+    assert all(b == pu.quality_bits for b in pf.chunk_bits.values())
+    assert pu.bytes_map == pf.bytes_map
+    assert np.array_equal(pu.planner.ts, pf.planner.ts)
+    assert pu.quality_bits == pf.quality_bits
+
+
+def test_attention_schedule_scales_bytes_per_chunk():
+    wl = _wl()
+    pu = _plan(SP, wl=wl)
+    pa = _plan(SP_ATT, wl=wl)
+    cb = pa.chunk_bits
+    assert cb is not None and set(cb) == set(pa.bytes_map)
+    assert set(cb.values()) <= set(BITRATE_LEVELS)
+    assert len(set(cb.values())) > 1          # actually heterogeneous
+    base = pu.quality_bits
+    for c, v in pa.bytes_map.items():
+        assert np.isclose(v, pu.bytes_map[c] * cb[c] / base, rtol=1e-12)
+    # hot chunks (most attention mass) got the finer widths
+    hot = max(cb, key=lambda c: pa.active_map[c])
+    cold = min(cb, key=lambda c: pa.active_map[c])
+    assert cb[hot] >= cb[cold]
+
+
+def test_weighted_quality_legacy_when_chunk_bits_none():
+    class R:
+        n_streamed, n_computed, n_reused = 3, 5, 0
+    q = B._mixed_quality(R(), 5)
+    assert np.isclose(q, (5 + 3 * QUALITY_OF_BITS[5]) / 8)
+
+
+def test_weighted_quality_favors_hot_chunks():
+    """Saliency-weighted quality: a plan that keeps its hot chunks fine
+    scores above the same chunks' unweighted mean."""
+    grid = ChunkGrid(n_t=2, n_l=2, n_h=1)
+    chunks = list(grid.chunks())
+    weights = {c: (10.0 if i < 1 else 1.0) for i, c in enumerate(chunks)}
+    cb = {c: (6 if weights[c] > 1 else 4) for c in chunks}
+
+    class R:
+        n_streamed, n_computed, n_reused = 4, 0, 0
+        computed_set = set()
+    qw = B._mixed_quality(R(), 5, chunk_bits=cb, active_map=weights)
+    flat = np.mean([QUALITY_OF_BITS[b] for b in cb.values()])
+    assert qw > flat
+    # computed chunks are exact regardless of their allocated width
+    class R2(R):
+        computed_set = set(chunks)
+    assert B._mixed_quality(R2(), 5, chunk_bits=cb,
+                            active_map=weights) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# cold-chunk SLO admission
+# ---------------------------------------------------------------------------
+
+def _idle_cluster(spcfg=SP, **kw):
+    kw.setdefault("run_queue", RunQueueModel(1, "fifo"))
+    cl = ServingCluster(CFG, spcfg, "jetson-orin", "campus-wifi",
+                        max_concurrency=8, **kw)
+    bw = BandwidthIntegrator(np.full(2000, NET.mean_bw), 0.01)
+    cl._link_server = single_link(bw, cl.link)
+    cl._run_queues = {0: DeviceRunQueue(cl.capacity,
+                                        cl.run_queue.discipline)}
+    return cl
+
+
+def test_cold_chunk_set_orders_by_attention_mass():
+    plan = _plan(SP)
+    cold = cold_chunk_set(plan, 0.4)
+    n = len(plan.active_map)
+    assert len(cold) == int(n * 0.4)
+    hottest = max(plan.active_map, key=lambda c: plan.active_map[c])
+    assert hottest not in cold
+    assert max(plan.active_map[c] for c in cold) <= \
+        min(plan.active_map[c] for c in set(plan.active_map) - cold)
+    assert cold_chunk_set(plan, 0.0) == frozenset()
+
+
+def test_predict_ttft_cold_saves_less_than_whole():
+    """Downgrading only the cold chunks leaves more bytes on the wire
+    than the whole-request downgrade at the same rung, but fewer than no
+    downgrade at all — and with cold=None the prediction is bitwise the
+    legacy one."""
+    cl = _idle_cluster()
+    plan = _plan(SP)
+    spec = RequestSpec(arrival_s=0.0, context_len=CTX, deadline_s=5.0)
+    base = predict_ttft(plan, cl, spec, 0.0)
+    whole = predict_ttft(plan, cl, spec, 0.0, bits=3)
+    cold = predict_ttft(plan, cl, spec, 0.0, bits=3,
+                        cold=cold_chunk_set(plan, 0.5))
+    assert whole < cold < base
+    assert predict_ttft(plan, cl, spec, 0.0, bits=3, cold=None) == whole
+
+
+def test_decide_admission_downgrades_cold_chunks_only():
+    """With cold_frac armed, a deadline between the cold-only and
+    full-fidelity predictions admits with a cold_chunks set; the legacy
+    policy (cold_frac=0) downgrades the whole request."""
+    cl = _idle_cluster()
+    plan = _plan(SP)
+    spec0 = RequestSpec(arrival_s=0.0, context_len=CTX, deadline_s=5.0)
+    base = predict_ttft(plan, cl, spec0, 0.0)
+    cold = cold_chunk_set(plan, 0.5)
+    cold5 = predict_ttft(plan, cl, spec0, 0.0, bits=5, cold=cold)
+    cold4 = predict_ttft(plan, cl, spec0, 0.0, bits=4, cold=cold)
+    assert cold4 < cold5 < base
+    # finest-first walk: 5 must miss the deadline, 4 must make it
+    deadline = (cold4 + cold5) / 2
+    spec = RequestSpec(arrival_s=0.0, context_len=CTX, deadline_s=deadline)
+    pol = SLOPolicy(cold_frac=0.5)
+    dec = decide_admission(pol, plan, cl, spec, 0.0)
+    assert dec.action == "admit" and dec.downgraded
+    assert dec.cold_chunks == cold and dec.bits == 4
+    legacy = decide_admission(SLOPolicy(), plan, cl, spec, 0.0)
+    assert legacy.action == "admit" and legacy.downgraded
+    assert legacy.cold_chunks is None
+
+
+def test_cold_frac_zero_policy_is_default():
+    assert SLOPolicy().cold_frac == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fleet-level parity and integration
+# ---------------------------------------------------------------------------
+
+def _fleet(spcfg, slo=None, n=6, deadline_s=None, seed=5):
+    wl = _wl(seed=seed)
+    specs = [RequestSpec(arrival_s=0.2 * i, policy="sparkv", seed=i,
+                         wl=wl, deadline_s=deadline_s) for i in range(n)]
+    cl = ServingCluster(CFG, spcfg, "jetson-orin", "campus-wifi",
+                        max_concurrency=3, slo=slo, seed=0)
+    return cl.run(specs)
+
+
+def test_flat_fleet_bit_identical_timing_to_uniform():
+    """The "flat" schedule must not perturb a fleet's timing at all:
+    identical wire bytes -> identical TTFT/energy traces (quality is
+    re-weighted, fidelity unchanged at base width everywhere)."""
+    ru = _fleet(SP)
+    rf = _fleet(SP_FLAT)
+    for a, b in zip(ru.records, rf.records):
+        assert a.ttft_s == b.ttft_s
+        assert a.bytes_streamed == b.bytes_streamed
+        assert a.energy_j == b.energy_j
+        assert a.n_streamed == b.n_streamed
+        # fidelity is the base width everywhere in both fleets; the
+        # flat arm re-weights the mix by attention mass, so quality may
+        # drift slightly but stays pinned between the base-width floor
+        # and exact
+        assert QUALITY_OF_BITS[a.quant_bits] - 1e-12 <= b.quality <= 1.0
+        assert abs(a.quality - b.quality) < 0.01
+
+
+def test_attention_fleet_trades_bytes_for_weighted_quality():
+    """The attention schedule's planned wire footprint shrinks (40% of
+    chunks drop a rung, 30% gain one: 0.4*4/5 + 0.3*6/5 + 0.3 = 0.98 of
+    uniform); the fleet still completes with quality pinned above the
+    coarsest allocated rung. Streamed bytes are NOT compared — cheaper
+    cold chunks legitimately shift the hybrid stream/compute split."""
+    wl = _wl(seed=5)
+    pu = _plan(SP, policy="sparkv", wl=wl)
+    pa = _plan(SP_ATT, policy="sparkv", wl=wl)
+    assert sum(pa.bytes_map.values()) < sum(pu.bytes_map.values())
+    ra = _fleet(SP_ATT)
+    assert ra.records
+    floor = QUALITY_OF_BITS[min(pa.chunk_bits.values())]
+    for r in ra.records:
+        assert floor - 1e-12 <= r.quality <= 1.0
+
+
+def test_cold_chunk_fleet_completes_with_higher_floor():
+    """End-to-end: overloaded deadline fleet under cold-chunk admission
+    completes, downgrades someone, and never reports a quality below the
+    whole-request ladder floor."""
+    slo = SLOPolicy(cold_frac=0.6)
+    rep = _fleet(SP_FLAT, slo=slo, n=8, deadline_s=2.0)
+    done = rep.records
+    assert done, "everyone shed"
+    floor = QUALITY_OF_BITS[BITRATE_LEVELS[-1]]
+    for r in done:
+        assert r.quality >= floor - 1e-9
+    down = [r for r in done if r.downgraded]
+    if down:
+        # cold-chunk downgrade keeps the base width on hot chunks: the
+        # record's quant_bits anchor never drops
+        assert all(r.quant_bits == SP.quant_bits for r in down)
