@@ -38,6 +38,7 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("simcore", "benchmarks.bench_simcore"),
     ("quant", "benchmarks.bench_quant"),
+    ("hostile", "benchmarks.bench_hostile"),
 ]
 
 

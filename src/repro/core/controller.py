@@ -84,6 +84,8 @@ class RuntimeController:
         self.queue_win = WindowStat(spcfg.window_s)      # wait/service
         self.migrations_this_stage = 0
         self.n_migrations = 0
+        self.n_losses = 0             # aborted transfers observed (mobility)
+        self.bytes_lost = 0.0         # wasted wire bytes across those aborts
         self._last_reset = 0.0
         # SLO deadline (absolute, on the driver's clock); None = no SLO
         self.deadline_s: Optional[float] = None
@@ -104,6 +106,17 @@ class RuntimeController:
         """Device run-queue wait observed for one compute chunk (engine
         calls this when the driver acknowledged a queued start)."""
         self.queue_win.add(t, wait_s / max(service_s, 1e-9))
+
+    def note_loss(self, t: float, *, nbytes_lost: float = 0.0):
+        """An in-flight transfer was aborted (handoff re-route, AP
+        outage): record a zero-delivery bandwidth sample so the measured
+        link rate reflects the wasted wire time — repeated losses drag
+        ``measured_bw`` down and create migration pressure toward local
+        compute at the very boundary where the lost chunk re-enters the
+        backlog."""
+        self.bw_win.add(t, 0.0)
+        self.n_losses += 1
+        self.bytes_lost += float(nbytes_lost)
 
     def set_deadline(self, t_deadline_s: float, *,
                      slack_guard_s: Optional[float] = None,

@@ -103,6 +103,11 @@ class EngineResult:
     n_reused: int = 0             # chunks satisfied by the device prefix cache
     n_store_hits: int = 0         # chunks streamed as cloud-store hits
     bytes_hit_stream: float = 0.0  # streamed bytes that rode the hit leg
+    # hostile-world mobility (zeros without scenario events — defaults
+    # keep static fleets bit-identical)
+    n_lost: int = 0               # in-flight transfers aborted (handoff/outage)
+    bytes_lost: float = 0.0       # partially delivered bytes wasted by aborts
+    bytes_restreamed: float = 0.0  # bytes re-issued for previously-lost chunks
 
     def breakdown(self) -> dict:
         return {
@@ -304,6 +309,22 @@ class Wait:
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamLost:
+    """Driver's alternative reply at a ``Wait`` yield: the in-flight
+    network transfer for `chunk` was aborted mid-delivery (AP handoff
+    re-route, AP outage, device churn). Entropy-coded chunk bitstreams
+    are undecodable from a partial prefix, so the ``nbytes_delivered``
+    bytes already on the wire are wasted; the engine re-enters the chunk
+    at the head of its stream backlog and the next ``StreamStart`` rides
+    whatever path the driver now routes (the controller may instead flip
+    the chunk to local compute at this boundary — the paper's §IV-D
+    runtime refinement applied to a route loss)."""
+    chunk: Chunk
+    t_s: float                # driver clock at the abort
+    nbytes_delivered: float   # bytes delivered (and wasted) before abort
+
+
+@dataclasses.dataclass(frozen=True)
 class Completion:
     path: str                 # "stream" | "compute"
     chunk: Chunk
@@ -440,9 +461,43 @@ class HybridEngine:
         n_queued = 0
         submit_t: dict[Chunk, float] = {}     # compute admission times
         deferred: set[Chunk] = set()          # queued: record at completion
+        # mobility loss/resume bookkeeping (inert on static fleets)
+        n_lost = 0
+        bytes_lost = 0.0
+        bytes_restreamed = 0.0
+        attempted: set[Chunk] = set()         # chunks with a StreamStart issued
+        pending_stream = None                 # (chunk, nbytes, t_proc, is_hit)
 
         def ready_set():
             return {c for c in comp_q if g.compute_ready(c, state)}
+
+        def controller_boundary():
+            # controller migrations at an event boundary (completion or
+            # route loss) — shared so a loss gets the same §IV-D
+            # stream<->compute refinement a completion does
+            nonlocal n_migr
+            migr = self.controller.decide(
+                now, stream_queue=stream_q, comp_queue=comp_q,
+                ready=ready_set() | {cc for cc in stream_q
+                                     if g.compute_ready(cc, state)},
+                chunk_bytes=self.chunk_bytes,
+                t_comp_pred=self.t_comp_pred)
+            for m in migr:
+                if m.to_path == "compute" and m.chunk in stream_q \
+                        and m.chunk not in store_hits:
+                    stream_q.remove(m.chunk)
+                    comp_q.insert(0, m.chunk)
+                    n_migr += 1
+                elif m.to_path == "stream" and m.chunk in comp_q:
+                    # never strand a compute-assigned dependent: its
+                    # layer dep requires this chunk to be *computed*
+                    dependent = (m.chunk.l + 1 < g.n_l and
+                                 Chunk(m.chunk.t, m.chunk.l + 1,
+                                       m.chunk.h) in comp_q)
+                    if not dependent:
+                        comp_q.remove(m.chunk)
+                        stream_q.append(m.chunk)
+                        n_migr += 1
 
         guard = 0
         while done < total:
@@ -455,7 +510,8 @@ class HybridEngine:
                 c = stream_q.pop(0)
                 nbytes = self.chunk_bytes[c]
                 t_proc = self.profile.t_proc(nbytes)
-                if c in store_hits:
+                is_hit = c in store_hits
+                if is_hit:
                     # cached in the cloud store: ride the cached-egress leg
                     yield StoreHit(c, nbytes, t_proc)
                     n_store_hits += 1
@@ -471,6 +527,10 @@ class HybridEngine:
                 inflight += 1
                 proc_busy += t_proc
                 bytes_streamed += nbytes
+                if c in attempted:
+                    bytes_restreamed += nbytes
+                attempted.add(c)
+                pending_stream = (c, nbytes, t_proc, is_hit)
                 progressed = True
             # start compute on first ready chunk in priority order
             if not dev_busy:
@@ -508,6 +568,32 @@ class HybridEngine:
                 continue
             # park until the driver delivers this request's next completion
             ev = yield Wait()
+            if isinstance(ev, StreamLost):
+                # mid-transfer route loss: roll back the optimistic
+                # accounting from this attempt's StreamStart (the bytes
+                # never arrived, its decode tail is never paid), wasted
+                # wire bytes land in bytes_lost, and the chunk re-enters
+                # the head of the stream backlog for re-route / flip
+                assert pending_stream is not None \
+                    and pending_stream[0] == ev.chunk, (pending_stream, ev)
+                c, nbytes, t_proc, is_hit = pending_stream
+                pending_stream = None
+                inflight -= 1
+                net_busy = False
+                now = max(now, ev.t_s)
+                n_lost += 1
+                bytes_lost += ev.nbytes_delivered
+                bytes_streamed -= nbytes
+                proc_busy -= t_proc
+                if is_hit:
+                    n_store_hits -= 1
+                    bytes_hit_stream -= nbytes
+                stream_q.insert(0, c)
+                if self.controller is not None:
+                    self.controller.note_loss(
+                        now, nbytes_lost=ev.nbytes_delivered)
+                    controller_boundary()
+                continue
             assert isinstance(ev, Completion), ev
             inflight -= 1
             now = max(now, ev.t_end)
@@ -516,6 +602,7 @@ class HybridEngine:
             timeline.append((ev.t_start, ev.t_end, ev.path, c))
             if ev.path == "stream":
                 net_busy = False
+                pending_stream = None
                 stream_busy += ev.t_end - ev.t_start
                 state[i] = State.STREAMED
                 streamed_set.add(c)
@@ -540,28 +627,7 @@ class HybridEngine:
             done += 1
             # controller migrations at event boundary
             if self.controller is not None:
-                migr = self.controller.decide(
-                    now, stream_queue=stream_q, comp_queue=comp_q,
-                    ready=ready_set() | {cc for cc in stream_q
-                                         if g.compute_ready(cc, state)},
-                    chunk_bytes=self.chunk_bytes,
-                    t_comp_pred=self.t_comp_pred)
-                for m in migr:
-                    if m.to_path == "compute" and m.chunk in stream_q \
-                            and m.chunk not in store_hits:
-                        stream_q.remove(m.chunk)
-                        comp_q.insert(0, m.chunk)
-                        n_migr += 1
-                    elif m.to_path == "stream" and m.chunk in comp_q:
-                        # never strand a compute-assigned dependent: its
-                        # layer dep requires this chunk to be *computed*
-                        dependent = (m.chunk.l + 1 < g.n_l and
-                                     Chunk(m.chunk.t, m.chunk.l + 1,
-                                           m.chunk.h) in comp_q)
-                        if not dependent:
-                            comp_q.remove(m.chunk)
-                            stream_q.append(m.chunk)
-                            n_migr += 1
+                controller_boundary()
 
         if self.max_new_tokens <= 0:
             # first-token-only accounting (bit-identical to pre-decode
@@ -583,7 +649,9 @@ class HybridEngine:
                 compute_wait_s=compute_wait, n_compute_queued=n_queued,
                 ttlt_s=ttft, token_times=(ttft,),
                 n_reused=n_reused, n_store_hits=n_store_hits,
-                bytes_hit_stream=bytes_hit_stream)
+                bytes_hit_stream=bytes_hit_stream,
+                n_lost=n_lost, bytes_lost=bytes_lost,
+                bytes_restreamed=bytes_restreamed)
 
         # ---- decode phase: the driver owns token timing (batched) ----
         t_ctx_done = now
@@ -617,7 +685,9 @@ class HybridEngine:
             tpot_s=(ttlt - ttft) / max(n_out - 1, 1),
             decode_busy_s=decode_busy, token_times=tuple(token_t),
             n_reused=n_reused, n_store_hits=n_store_hits,
-            bytes_hit_stream=bytes_hit_stream)
+            bytes_hit_stream=bytes_hit_stream,
+            n_lost=n_lost, bytes_lost=bytes_lost,
+            bytes_restreamed=bytes_restreamed)
 
     # ------------------------------------------------------------------
     # Classic single-request driver (exclusive link + device)

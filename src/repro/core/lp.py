@@ -20,6 +20,12 @@ class LPResult:
     status: str                # optimal | infeasible | unbounded | maxiter
     x: Optional[np.ndarray]
     fun: float
+    # final basic column set (slack columns included). Feed it back as
+    # ``warm_basis`` on a structurally identical problem with perturbed
+    # data — an event-to-event re-solve (the fleet rebalancer) then skips
+    # phase 1 whenever the old basis is still primal-feasible.
+    basis: Optional[np.ndarray] = None
+    warm_used: bool = False    # True when the warm basis skipped phase 1
 
 
 def _pivot(T: np.ndarray, basis: np.ndarray, row: int, col: int):
@@ -55,7 +61,8 @@ def _simplex_core(T: np.ndarray, basis: np.ndarray, n_real: int,
 
 
 def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None,
-             max_iter: int = 20000) -> LPResult:
+             max_iter: int = 20000,
+             warm_basis=None) -> LPResult:
     c = np.asarray(c, float)
     n = len(c)
     A_ub = np.zeros((0, n)) if A_ub is None else np.asarray(A_ub, float)
@@ -75,6 +82,43 @@ def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None,
         if b[r] < 0:
             A[r] *= -1
             b[r] *= -1
+
+    # warm start: a prior run's basis on a structurally identical problem
+    # (same row/column layout, perturbed data). When it is still primal
+    # feasible — B nonsingular, B^{-1} b >= 0 — phase 1 is skipped and
+    # phase 2 resumes from the old vertex; otherwise fall through to the
+    # cold two-phase path (bit-identical results either way: both end at
+    # an optimal vertex of the same LP).
+    if warm_basis is not None and len(warm_basis) == m:
+        wb = np.asarray(warm_basis, int)
+        if np.all((wb >= 0) & (wb < n + mu)) and len(np.unique(wb)) == m:
+            Bmat = A[:, wb]
+            try:
+                xb = np.linalg.solve(Bmat, b)
+                rows = np.linalg.solve(Bmat, A)
+            except np.linalg.LinAlgError:
+                xb = None
+            if xb is not None and np.all(xb >= -1e-9):
+                T2 = np.zeros((m + 1, n + mu + 1))
+                T2[:m, :n + mu] = rows
+                T2[:m, -1] = np.maximum(xb, 0.0)
+                basis = wb.copy()
+                T2[-1, :n] = c
+                for r in range(m):
+                    bcol = basis[r]
+                    if T2[-1, bcol] != 0.0:
+                        T2[-1] -= T2[-1, bcol] * T2[r]
+                st = _simplex_core(T2, basis, n, max_iter)
+                if st == "optimal":
+                    x = np.zeros(n + mu)
+                    for r in range(m):
+                        if basis[r] < n + mu:
+                            x[basis[r]] = T2[r, -1]
+                    return LPResult("optimal", x[:n], float(c @ x[:n]),
+                                    basis=basis.copy(), warm_used=True)
+                if st == "unbounded":
+                    return LPResult(st, None, -np.inf)
+                # maxiter from a warm vertex: retry cold below
 
     # basis: slack where possible, artificial otherwise
     basis = np.full(m, -1, int)
@@ -126,4 +170,4 @@ def solve_lp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None,
         if basis[r] < n + mu:
             x[basis[r]] = T2[r, -1]
     return LPResult("optimal", x[:n], float(T2[-1, -1] * -1.0)
-                    if False else float(c @ x[:n]))
+                    if False else float(c @ x[:n]), basis=basis.copy())

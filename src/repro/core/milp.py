@@ -225,6 +225,118 @@ def _extract_assign(prob: MILPProblem, x) -> Optional[dict]:
     return assign
 
 
+# ---------------------------------------------------------------------------
+# Fleet-level LP relaxation (serving/scenarios.FleetRebalancer)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetLP:
+    """LP relaxation of the fleet placement problem — Eq. 1's
+    stream-vs-compute makespan lifted from one request's chunks to the
+    whole fleet's byte demands (the continuous relaxation the
+    :class:`~repro.serving.scenarios.FleetRebalancer` re-solves at every
+    handoff/outage/churn event).
+
+    Variable layout (n = D*A + D + 1)::
+
+        y[d,a] = v[d*A + a]       bytes device d streams via AP a
+        c[d]   = v[D*A + d]       bytes device d prefills locally
+        T      = v[D*A + D]       fleet makespan (the objective)
+
+    Constraints: per-device demand conservation (every outstanding byte
+    is either streamed through some reachable AP or computed locally),
+    per-AP uplink capacity ``sum_d y[d,a] <= bw_a * T``, per-device
+    compute capacity ``c_d <= rate_d * T``, and one reachability row per
+    (d, a) pair — ``y[d,a] <= 0`` when unreachable, slack (bounded by
+    total demand) when reachable, so the row layout is identical across
+    solves whatever the reach sets and a previous solve's basis stays
+    structurally valid as a warm start. Byte quantities are normalized
+    by the peak demand so the simplex works on O(1) numbers whatever
+    the context sizes.
+    """
+    demand: np.ndarray        # (D,) outstanding bytes per device
+    ap_bw: np.ndarray         # (A,) effective uplink capacity, bytes/s
+    comp_rate: np.ndarray     # (D,) local prefill throughput, bytes/s
+    reach: list               # device -> iterable of reachable AP ids
+
+    def __post_init__(self):
+        self.demand = np.asarray(self.demand, float)
+        self.ap_bw = np.asarray(self.ap_bw, float)
+        self.comp_rate = np.asarray(self.comp_rate, float)
+        self.D = len(self.demand)
+        self.A = len(self.ap_bw)
+        assert len(self.comp_rate) == self.D
+        assert len(self.reach) == self.D
+        self.n = self.D * self.A + self.D + 1
+        self._scale = max(float(self.demand.max(initial=0.0)), 1.0)
+
+    def ix_y(self, d: int, a: int) -> int:
+        return d * self.A + a
+
+    def ix_c(self, d: int) -> int:
+        return self.D * self.A + d
+
+    @property
+    def ix_t(self) -> int:
+        return self.D * self.A + self.D
+
+    def build(self):
+        D, A, n, s = self.D, self.A, self.n, self._scale
+        obj = np.zeros(n)
+        obj[self.ix_t] = 1.0
+        A_eq, b_eq, A_ub, b_ub = [], [], [], []
+        for d in range(D):                    # demand conservation
+            row = np.zeros(n)
+            for a in range(A):
+                row[self.ix_y(d, a)] = 1.0
+            row[self.ix_c(d)] = 1.0
+            A_eq.append(row)
+            b_eq.append(self.demand[d] / s)
+        for a in range(A):                    # AP uplink capacity
+            row = np.zeros(n)
+            for d in range(D):
+                row[self.ix_y(d, a)] = 1.0
+            row[self.ix_t] = -max(self.ap_bw[a], 1e-9) / s
+            A_ub.append(row)
+            b_ub.append(0.0)
+        for d in range(D):                    # local compute capacity
+            row = np.zeros(n)
+            row[self.ix_c(d)] = 1.0
+            row[self.ix_t] = -max(self.comp_rate[d], 1e-9) / s
+            A_ub.append(row)
+            b_ub.append(0.0)
+        tot = float(self.demand.sum()) / s    # slack bound, reachable rows
+        for d in range(D):                    # reachability (fixed layout)
+            ok = set(self.reach[d])
+            for a in range(A):
+                row = np.zeros(n)
+                row[self.ix_y(d, a)] = 1.0
+                A_ub.append(row)
+                b_ub.append(tot if a in ok else 0.0)
+        return obj, np.array(A_ub), np.array(b_ub), \
+            np.array(A_eq), np.array(b_eq)
+
+    def extract(self, x: np.ndarray) -> tuple[dict, np.ndarray, float]:
+        """(placement device -> AP carrying its largest streamed share,
+        per-device locally-computed fraction, makespan seconds).
+        Zero-demand devices keep no placement entry — the caller leaves
+        them where they are."""
+        placement: dict[int, int] = {}
+        local_frac = np.zeros(self.D)
+        for d in range(self.D):
+            if self.demand[d] <= 0:
+                continue
+            y = np.array([x[self.ix_y(d, a)] for a in range(self.A)])
+            tot = y.sum() + x[self.ix_c(d)]
+            if tot <= 0:
+                continue
+            local_frac[d] = float(x[self.ix_c(d)] / tot)
+            if y.max() > 0:
+                placement[d] = int(np.argmax(y))
+        return placement, local_frac, float(x[self.ix_t])
+
+
 def brute_force(prob: MILPProblem) -> tuple[float, Optional[dict]]:
     """Exhaustive search for unit tests (tiny instances only)."""
     C, K = prob.C, prob.K

@@ -275,3 +275,15 @@ class LatencyPredictor:
         if self._eta_hat is None:
             return None
         return min(self._eta_hat / max(n_flows, 1), 1.0)
+
+    def effective_capacity(self, mean_bw: float, n_flows: int = 1) -> float:
+        """Aggregate deliverable bandwidth of a fair-shared link carrying
+        ``n_flows``: profiled mean scaled by the learned contention
+        efficiency ``eta_hat`` (the profiled mean itself when
+        unrefreshed). The fleet rebalancer's warm-start capacity estimate
+        — its LP sees link capacities the online model has already
+        corrected for MAC-contention overhead."""
+        share = self.predict_share(max(n_flows, 1))
+        if share is None:
+            return float(mean_bw)
+        return float(mean_bw * share * max(n_flows, 1))

@@ -93,8 +93,9 @@ from repro.core.costs import (GroundTruthLatency, KVStoreModel, MemoryModel,
                               chunk_bytes_at_bits)
 from repro.core.engine import (BandwidthIntegrator, Completion, ComputeStart,
                                DecodeDone, DecodeStart, DecodeTick,
-                               HybridEngine, StartAck, StoreHit, StreamStart,
-                               Wait, context_kv_bytes, token_kv_bytes)
+                               HybridEngine, StartAck, StoreHit, StreamLost,
+                               StreamStart, Wait, context_kv_bytes,
+                               token_kv_bytes)
 from repro.core.predictor import (LatencyPredictor, backlog_delay_s,
                                   queue_utilization)
 from repro.data.workloads import DATASETS, WorkloadChunks, synthesize
@@ -106,6 +107,8 @@ from repro.serving.resources import (DeviceRunQueue, LinkStage, LinkTopology,
                                      ScalarLinkTopology, single_link,
                                      tree_path, tree_topology,
                                      uplink_stage_name)
+from repro.serving.scenarios import (FleetState, FleetRebalancer,
+                                     ScenarioTrace, apply_outages)
 from repro.serving.simcore import STATS as SIM_STATS
 from repro.serving.simcore import EventKind, EventQueue
 from repro.serving.slo import (SLOPolicy, decide_admission,
@@ -236,6 +239,13 @@ class _ActiveRequest:
     stream_chunk: Optional[Chunk] = None
     stream_t0: float = 0.0
     stream_t_proc: float = 0.0
+    stream_nbytes: float = 0.0
+    # hostile-world bookkeeping: the chunk computing on the device (churn
+    # cancellation), whether decode started (churn spares decoders), and
+    # the context bytes still to assemble (rebalancer demand signal)
+    comp_chunk: Optional[Chunk] = None
+    decoding: bool = False
+    bytes_left: float = 0.0
     # SLO / scheduling state
     weight: float = 1.0                     # effective WFQ weight
     deadline_abs: Optional[float] = None    # arrival + deadline_s
@@ -274,6 +284,9 @@ class FleetReport:
     # summary() block is then absent, keeping no-reuse summaries
     # bit-identical)
     reuse: Optional[dict] = None
+    # hostile-world scenario telemetry (None when the run had no armed
+    # ScenarioTrace — static-fleet summaries stay bit-identical)
+    scenario: Optional[dict] = None
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft_s for r in self.records])
@@ -312,7 +325,16 @@ class FleetReport:
             **self._slo_summary(),
             **self._memory_summary(),
             **self._reuse_summary(),
+            **self._scenario_summary(),
         }
+
+    def _scenario_summary(self) -> dict:
+        """Hostile-world block of :meth:`summary` — present only when
+        the run armed a :class:`~repro.serving.scenarios.ScenarioTrace`
+        (handoff/loss/churn/outage/rebalance counters from the run)."""
+        if self.scenario is None:
+            return {}
+        return dict(self.scenario)
 
     def _reuse_summary(self) -> dict:
         """Cross-request reuse block of :meth:`summary` — present only
@@ -430,7 +452,9 @@ class FleetReport:
 def telemetry_policy(spec: RequestSpec, cluster: "ServingCluster",
                      *, bw_floor_frac: float = 0.4,
                      decode_busy_frac: float = 1.0,
-                     memory_ceiling: float = 0.9) -> str:
+                     memory_ceiling: float = 0.9,
+                     full_set: bool = False,
+                     cachegen_floor_frac: float = 0.15) -> str:
     """Default ``policy_fn``: pick sparkv vs. local_prefill from the live
     resource servers at admission time.
 
@@ -458,8 +482,19 @@ def telemetry_policy(spec: RequestSpec, cluster: "ServingCluster",
         ``memory_ceiling`` of the device's KV budget the stream path is
         preferable since evictions would immediately claw back whatever
         compute time local prefill saved.
+
+    ``full_set=True`` extends the chooser to the full policy set for
+    hostile-world fleets: the projected share is additionally deflated
+    by the device's live AP outage health (``cluster.uplink_health``),
+    and a link starved below ``cachegen_floor_frac`` whose device has
+    *no* compute slack falls back to the ``cachegen`` bitrate ladder —
+    streaming fewer bytes at graded fidelity is the only lever left
+    when neither the uplink nor the device has headroom. The default
+    ``full_set=False`` is bit-identical to the two-policy chooser.
     """
     frac = cluster.projected_flow_frac(spec.device)
+    if full_set:
+        frac *= cluster.uplink_health(spec.device)
     link_starved = frac < bw_floor_frac
     device_slack = cluster.device_load(spec.device) < cluster.capacity
     dcfg = cluster.decode_cfg if cluster.decode_cfg is not None \
@@ -467,8 +502,11 @@ def telemetry_policy(spec: RequestSpec, cluster: "ServingCluster",
     decode_slack = cluster.decode_occupancy(spec.device) \
         < decode_busy_frac * dcfg.max_batch
     memory_ok = cluster.memory_pressure(spec.device) < memory_ceiling
-    return "local_prefill" if link_starved and device_slack \
-        and decode_slack and memory_ok else "sparkv"
+    if link_starved and device_slack and decode_slack and memory_ok:
+        return "local_prefill"
+    if full_set and frac < cachegen_floor_frac:
+        return "cachegen"
+    return "sparkv"
 
 
 # ---------------------------------------------------------------------------
@@ -571,6 +609,22 @@ class ServingCluster:
         ``stage_shares`` ``{}``); default ``True`` preserves current
         reports. Fleets that never read share telemetry save the
         per-event accumulation entirely.
+    scenario : a ``repro.serving.scenarios.ScenarioTrace`` arms the
+        hostile-world machinery: mid-stream AP handoffs (in-flight
+        transfers lost, chunks re-enter the backlog via the engine's
+        ``StreamLost`` leg), AP outage windows (uplink traces masked to
+        the outage floor; in-flight streams through the AP aborted at
+        window start; SLO admission sees the degraded health), and
+        device churn (still-prefilling requests re-placed through
+        admission on a live device; decoders finish locally). A trace
+        with no events — or ``scenario=None`` — pushes zero extra
+        events and is bit-identical to the static fleet.
+    rebalancer : a ``repro.serving.scenarios.FleetRebalancer`` re-solves
+        placement + policy fleet-wide (LP relaxation of the Eq. 1
+        makespan split, warm-started basis-to-basis and through the
+        online predictor's contention model) at every scenario event;
+        AP moves are applied as handoffs and policy hints steer future
+        admissions. Requires an armed ``scenario`` to ever fire.
     bw_trace / bw_dt : optional explicit uplink trace (otherwise an OU
         trace is drawn from the network profile with ``bw_seed``).
     """
@@ -596,6 +650,8 @@ class ServingCluster:
                  kvstore: Optional[KVStoreModel] = None,
                  link_core: str = "vectorized",
                  link_telemetry: bool = True,
+                 scenario: Optional[ScenarioTrace] = None,
+                 rebalancer: Optional[FleetRebalancer] = None,
                  bw_trace: Optional[np.ndarray] = None, bw_dt: float = 0.01,
                  bw_seed: int = 991, seed: int = 0):
         self.cfg = cfg
@@ -646,6 +702,14 @@ class ServingCluster:
         assert link_core in ("vectorized", "scalar"), link_core
         self.link_core = link_core
         self.link_telemetry = link_telemetry
+        # hostile-world scenario: a ScenarioTrace with no events (or
+        # None) pushes zero extra events and leaves the fleet
+        # bit-identical to a scenario-free run
+        self.scenario = scenario
+        self.rebalancer = rebalancer
+        self._ap_now: Optional[list] = None     # live AP map during run()
+        self._outage_now: set = set()           # APs inside an outage
+        self._policy_hints: dict = {}           # rebalancer policy picks
         self.bw_trace = bw_trace
         self.bw_dt = bw_dt
         self.bw_seed = bw_seed
@@ -707,13 +771,32 @@ class ServingCluster:
         m = self._memory.get(device)
         return m.pressure() if m is not None else 0.0
 
+    def _ap_of(self, device: int) -> int:
+        """`device`'s *current* AP: the live handoff map while a
+        scenario is armed, the static assignment otherwise."""
+        if self._ap_now is not None:
+            return self._ap_now[device]
+        return self.ap_of_device[device] \
+            if device < len(self.ap_of_device) else 0
+
+    def uplink_health(self, device: int = 0) -> float:
+        """Fraction of its nominal uplink bandwidth `device`'s current
+        AP retains right now: the scenario's outage floor while the AP
+        sits inside an outage window, 1.0 otherwise (always 1.0 on a
+        scenario-free cluster — callers can multiply unconditionally).
+        SLO admission (``slo.predict_ttft``) and the full-set
+        :func:`telemetry_policy` fold this in."""
+        if self.scenario is not None and self._outage_now \
+                and self._ap_of(device) in self._outage_now:
+            return self.scenario.outage_floor_frac
+        return 1.0
+
     def _shared_stages(self, device: int) -> tuple:
         """(stage name, profiled mean bw, link model) for every *shared*
         stage of `device`'s path — its AP uplink, plus the cloud egress
         when the topology has one. Per-device NIC stages are excluded:
         they are exclusive, so their projection is the profile mean."""
-        ap = self.ap_of_device[device] if device < len(self.ap_of_device) \
-            else 0
+        ap = self._ap_of(device)
         out = ((uplink_stage_name(ap, self.n_aps), self.net.mean_bw,
                 self.link),)
         if self.egress is not None:
@@ -827,8 +910,20 @@ class ServingCluster:
         if self._nic_profiles is not None:
             nics = [draw(p, self.bw_seed + 7919 * (d + 1))
                     for d, p in enumerate(self._nic_profiles)]
-        uplinks = [integrator] + [draw(self.net,
-                                       self.bw_seed + 60013 * a)
+
+        def draw_uplink(a: int) -> BandwidthIntegrator:
+            # same rng stream as the scenario-free draw; outage windows
+            # only mask the already-drawn samples (apply_outages returns
+            # the input untouched when no window names this AP)
+            rng = np.random.default_rng(self.bw_seed + 60013 * a)
+            tr = self.net.trace(rng, horizon_s, self.bw_dt)
+            scen = self.scenario
+            if scen is not None and scen.outages:
+                tr = apply_outages(tr, self.bw_dt, scen.outages, a,
+                                   scen.outage_floor_frac)
+            return BandwidthIntegrator(tr, self.bw_dt)
+
+        uplinks = [integrator] + [draw_uplink(a)
                                   for a in range(1, self.n_aps)]
         egress = None if self.egress is None \
             else draw(self.egress, self.bw_seed + 15485863)
@@ -840,7 +935,7 @@ class ServingCluster:
                              telemetry=self.link_telemetry)
 
     def _flow_path(self, device: int) -> tuple:
-        return tree_path(device, self.ap_of_device[device], self.n_aps,
+        return tree_path(device, self._ap_of(device), self.n_aps,
                          has_nic=self._nic_profiles is not None,
                          has_egress=self.egress is not None)
 
@@ -848,7 +943,7 @@ class ServingCluster:
         """Path of a cloud-store hit: the store's edge replica sits
         below the cloud-egress stage, so the cached bytes cross the
         device's NIC and its AP uplink but never the shared egress."""
-        return tree_path(device, self.ap_of_device[device], self.n_aps,
+        return tree_path(device, self._ap_of(device), self.n_aps,
                          has_nic=self._nic_profiles is not None,
                          has_egress=False)
 
@@ -872,6 +967,13 @@ class ServingCluster:
             trace = self.net.trace(rng, horizon, self.bw_dt)
         else:
             trace = self.bw_trace
+        # hostile-world scenario: arm only when it carries events — an
+        # empty ScenarioTrace (or None) must leave the run bit-identical
+        scen = self.scenario if (self.scenario is not None
+                                 and self.scenario.armed()) else None
+        if scen is not None and scen.outages:
+            trace = apply_outages(trace, self.bw_dt, scen.outages, 0,
+                                  scen.outage_floor_frac)
         integrator = BandwidthIntegrator(trace, self.bw_dt)
         link_server = self._build_link_server(integrator)
         self._link_server = link_server
@@ -925,6 +1027,30 @@ class ServingCluster:
         makespan = 0.0
         n_link_events = 0
         t_wall0 = time.perf_counter()
+
+        # ---- hostile-world state (inert on scenario-free runs) ----
+        n_scen_events = 0
+        reach_of: Optional[list] = None
+        dead_devices: set[int] = set()
+        dead_rids: set[int] = set()
+        scen_tele = {"n_handoffs": 0, "n_handoff_noop": 0,
+                     "n_streams_lost": 0, "bytes_lost": 0.0,
+                     "n_churned": 0, "n_replaced": 0, "n_outages": 0,
+                     "n_rebalances": 0}
+        if scen is not None:
+            self._ap_now = list(self.ap_of_device)
+            self._outage_now = set()
+            self._policy_hints = {}
+            reach_of = [(a,) for a in self.ap_of_device]
+            for h in scen.handoffs:
+                events.push(h.t_s, EventKind.HANDOFF, h.device, h)
+            for ce in scen.churn:
+                events.push(ce.t_s, EventKind.CHURN, ce.device, ce)
+            for w in scen.outages:
+                events.push(w.t_start_s, EventKind.OUTAGE_START, w.ap, w)
+                events.push(w.t_end_s, EventKind.OUTAGE_END, w.ap, w)
+            n_scen_events = (len(scen.handoffs) + len(scen.churn)
+                             + 2 * len(scen.outages))
 
         def push_compute(rid: int, chunk: Chunk, t0: float, dur: float):
             events.push(t0 + dur, EventKind.COMPUTE_DONE, rid, (chunk, t0))
@@ -1240,6 +1366,7 @@ class ServingCluster:
                         st.stream_chunk = ev.chunk
                         st.stream_t0 = now
                         st.stream_t_proc = ev.t_proc
+                        st.stream_nbytes = ev.nbytes
                         link_server.add(st.rid, ev.nbytes,
                                         path=self._flow_path(dev))
                         ev = st.gen.send(None)
@@ -1251,10 +1378,12 @@ class ServingCluster:
                         st.stream_t0 = now
                         st.stream_t_proc = ev.t_proc \
                             + st.plan.store_model.hit_latency_s
+                        st.stream_nbytes = ev.nbytes
                         link_server.add(st.rid, ev.nbytes,
                                         path=self._hit_path(dev))
                         ev = st.gen.send(None)
                     elif isinstance(ev, ComputeStart):
+                        st.comp_chunk = ev.chunk
                         if self.run_queue is not None:
                             t0 = self._run_queues[dev].submit(
                                 (st.rid, ev.chunk), ev.duration_s, now,
@@ -1275,6 +1404,7 @@ class ServingCluster:
                     elif isinstance(ev, DecodeStart):
                         # context assembled: join the device's continuous
                         # decode batch (token-boundary join)
+                        st.decoding = True
                         if self._memory:
                             # fully assembled == evictable from here on
                             self._memory[dev].mark_ready(st.rid, now)
@@ -1292,9 +1422,26 @@ class ServingCluster:
         def admit(rid: int, spec: RequestSpec) -> bool:
             """Admit one request (possibly quality-downgraded); returns
             False when the SLO layer shed it instead."""
+            if spec.device in dead_devices:
+                # churned target: re-place onto the least-loaded live
+                # device (shed when the whole fleet is gone)
+                live = [d for d in range(self.n_devices)
+                        if d not in dead_devices]
+                if not live:
+                    shed.append(ShedRecord(rid=rid, spec=spec, t_shed_s=now,
+                                           pred_ttft_s=float("inf"),
+                                           reason="churn"))
+                    return False
+                spec = dataclasses.replace(
+                    spec, device=min(live, key=self.device_load))
+                scen_tele["n_replaced"] += 1
             policy = spec.policy
             if self.policy_fn is not None:
                 policy = self.policy_fn(spec, self)
+            elif self._policy_hints:
+                # fleet rebalancer's per-device policy pick (only ever
+                # populated while a scenario is armed with a rebalancer)
+                policy = self._policy_hints.get(spec.device, policy)
             key_of, reuse = reuse_view(rid, spec, wls[rid])
             plan = B.plan_policy(policy, self.cfg, wls[rid],
                                  self.profile_name, self.net, self.spcfg,
@@ -1391,6 +1538,10 @@ class ServingCluster:
                                     spec.device),
                                 obs_n_flows=self.active_flows(),
                                 key_of=key_of)
+            # context bytes still to assemble (preloaded prefix chunks
+            # never move) — the rebalancer's per-device demand signal
+            st.bytes_left = sum(v for c, v in plan.bytes_map.items()
+                                if c not in plan.reuse_local)
             if self._memory:
                 self._memory[spec.device].admit(rid, now)
                 # resident bytes each assembled chunk adds (full-precision
@@ -1503,6 +1654,145 @@ class ServingCluster:
                 if admit(*queue.pop(0)):
                     break
 
+        # ---- hostile-world event machinery (reachable only when armed) --
+        def abort_stream(st: _ActiveRequest) -> bool:
+            """Kill `st`'s in-flight transfer (handoff / outage onset):
+            partially delivered bytes are wasted — an entropy-coded
+            chunk bitstream is undecodable from a prefix — and the chunk
+            re-enters the session's backlog via ``StreamLost`` (the
+            controller may flip it to local compute). False when nothing
+            was in flight, or the transfer already finished and only its
+            on-device dequant tail (STREAM_AVAIL) is pending."""
+            if st.stream_chunk is None:
+                return False
+            rem = link_server.remaining(st.rid)
+            if rem is None:
+                return False
+            delivered = max(st.stream_nbytes - rem, 0.0)
+            link_server.complete(st.rid)
+            chunk = st.stream_chunk
+            st.stream_chunk = None
+            scen_tele["n_streams_lost"] += 1
+            scen_tele["bytes_lost"] += delivered
+            res = drive(st, StreamLost(chunk, now, delivered))
+            if res is not None:
+                finalize(st, res)
+            return True
+
+        def do_handoff(dev: int, new_ap: int) -> None:
+            """Re-associate `dev` with `new_ap`: flip the live AP map
+            *first* (re-issued streams must ride the new path), then
+            abort its in-flight transfers. Same-AP handoffs are counted
+            no-ops; reload flows stay on the old path (a roaming reload
+            keeps draining — finite outages recover, so it cannot
+            starve)."""
+            if dev in dead_devices:
+                return
+            if self._ap_now[dev] == new_ap:
+                scen_tele["n_handoff_noop"] += 1
+                return
+            scen_tele["n_handoffs"] += 1
+            self._ap_now[dev] = new_ap
+            for st in list(active.values()):
+                if st.spec.device == dev:
+                    abort_stream(st)
+
+        def do_churn(ce) -> None:
+            """Device failure: every still-prefilling request on it
+            loses its in-flight work and is re-placed through admission
+            on a live device (same arrival time — TTFT includes the
+            lost work); decoding requests finish locally (decode needs
+            no uplink and their context is already resident)."""
+            dev = ce.device
+            if dev in dead_devices:
+                return
+            dead_devices.add(dev)
+            scen_tele["n_churned"] += 1
+            victims = [st for st in active.values()
+                       if st.spec.device == dev and not st.decoding]
+            for st in victims:
+                rid = st.rid
+                # the device is gone: silently drop its link flow and
+                # queued/in-service compute; the session is dead — no
+                # StreamLost, just close the generator
+                if st.stream_chunk is not None \
+                        and link_server.remaining(rid) is not None:
+                    link_server.complete(rid)
+                if st.comp_chunk is not None:
+                    if self.run_queue is not None:
+                        start_jobs(dev, self._run_queues[dev].cancel(
+                            (rid, st.comp_chunk), now))
+                    else:
+                        self._computing[dev].discard(rid)
+                st.gen.close()
+                dead_rids.add(rid)
+                if self._memory:
+                    self._memory[dev].release(rid, now)
+                if self._kvstore is not None:
+                    prefix_unindex(dev, rid, forget=True)
+                active.pop(rid)
+                target = ce.new_device
+                if target is None or target in dead_devices:
+                    live = [d for d in range(self.n_devices)
+                            if d not in dead_devices]
+                    target = min(live, key=self.device_load) \
+                        if live else None
+                if target is None:
+                    shed.append(ShedRecord(
+                        rid=rid, spec=st.spec, t_shed_s=now,
+                        pred_ttft_s=float("inf"), reason="churn"))
+                    continue
+                # re-admit as a fresh rid so the replacement rides the
+                # normal admission path (SLO ladder, reuse, policy fn)
+                new_rid = len(wls)
+                wls.append(wls[rid])
+                arrival_s[new_rid] = arrival_s[rid]
+                scen_tele["n_replaced"] += 1
+                events.push(now, EventKind.ARRIVAL, new_rid,
+                            dataclasses.replace(st.spec, device=target))
+
+        def rebalance(reason: str) -> bool:
+            """Snapshot the fleet and let the rebalancer re-solve
+            placement + policy fleet-wide; apply AP moves as handoffs
+            (aborting in-flight streams on moved devices) and stash the
+            policy hints for future admissions. False when there is no
+            rebalancer or it declined to act."""
+            if self.rebalancer is None or self._ap_now is None:
+                return False
+            demand = np.zeros(self.n_devices)
+            rate_obs: dict[int, list] = {}
+            for st in active.values():
+                d = st.spec.device
+                demand[d] += max(st.bytes_left, 0.0)
+                tot_t = float(np.sum(st.plan.planner.tc))
+                if tot_t > 0:
+                    rate_obs.setdefault(d, []).append(
+                        sum(st.plan.bytes_map.values()) / tot_t)
+            comp_rate = np.array(
+                [float(np.mean(rate_obs[d])) if d in rate_obs
+                 else self.net.mean_bw for d in range(self.n_devices)])
+            ap_health = np.ones(self.n_aps)
+            for a in self._outage_now:
+                ap_health[a] = scen.outage_floor_frac
+            ap_flows = np.zeros(self.n_aps)
+            for a in range(self.n_aps):
+                stg = link_server.stages.get(
+                    uplink_stage_name(a, self.n_aps))
+                if stg is not None:
+                    ap_flows[a] = len(stg.active)
+            dec = self.rebalancer.decide(FleetState(
+                now=now, demand=demand, ap_of_device=list(self._ap_now),
+                ap_health=ap_health, ap_flows=ap_flows,
+                mean_bw=self.net.mean_bw, comp_rate=comp_rate,
+                reach=list(reach_of), dead=frozenset(dead_devices)))
+            if dec is None:
+                return False
+            scen_tele["n_rebalances"] += 1
+            for d, a in sorted(dec.placement.items()):
+                do_handoff(d, a)
+            self._policy_hints = dict(dec.policy_hint)
+            return True
+
         guard = 0
         limit = 1000 + 200 * sum(w.n_t * w.n_l * max(w.n_h, 1) for w in wls) \
             + 50 * sum(s.max_new_tokens for s in specs)
@@ -1510,6 +1800,11 @@ class ServingCluster:
                 and self.memory_model.capacity_bytes is not None:
             # evict/reload cycles add events per token under pressure
             limit *= 6
+        if scen is not None:
+            # loss/re-stream cycles, churn re-admissions and rebalance
+            # handoffs add events per scenario event; the guard stays a
+            # livelock net, not a budget
+            limit = limit * 4 + 200 * n_scen_events
         while events or link_server.n_active():
             guard += 1
             if guard > limit:
@@ -1540,6 +1835,12 @@ class ServingCluster:
             t, kind, rid, payload = ev.t, ev.kind, ev.rid, ev.payload
             link_server.advance(t)
             now = t
+            if dead_rids and rid in dead_rids and kind in (
+                    EventKind.COMPUTE_DONE, EventKind.STREAM_AVAIL,
+                    EventKind.RELOAD_STREAM_DONE,
+                    EventKind.RELOAD_DISK_DONE,
+                    EventKind.RELOAD_COMPUTE_DONE):
+                continue        # stale event for a churned request
             if kind == EventKind.ARRIVAL:
                 if len(active) < self.max_concurrency and not queue \
                         and not gated(rid, payload):
@@ -1550,6 +1851,8 @@ class ServingCluster:
                 chunk, t0 = payload
                 st = active[rid]
                 st.comp_done_s += t - t0
+                st.comp_chunk = None
+                st.bytes_left -= st.plan.bytes_map[chunk]
                 if self.run_queue is not None:
                     started = self._run_queues[st.spec.device].complete(
                         (rid, chunk), t)
@@ -1599,6 +1902,7 @@ class ServingCluster:
                 chunk, t0 = payload
                 st = active[rid]
                 st.stream_chunk = None
+                st.bytes_left -= st.stream_nbytes
                 if self._memory:
                     charge_kv(st, st.kv_chunk_bytes)
                 if self._kvstore is not None:
@@ -1618,6 +1922,36 @@ class ServingCluster:
                 else:
                     self._computing[dev].discard(("kvreload", rid))
                 reload_leg_done(rid)
+            elif kind == EventKind.HANDOFF:
+                h = payload
+                if h.reachable is not None:
+                    # soft handoff: the rebalancer may place the device
+                    # on any reachable AP (and move others); without
+                    # one, the roam lands on the event's new_ap
+                    reach_of[h.device] = tuple(h.reachable)
+                    if not rebalance("handoff"):
+                        do_handoff(h.device, h.new_ap)
+                else:
+                    reach_of[h.device] = (h.new_ap,)
+                    do_handoff(h.device, h.new_ap)
+                    rebalance("handoff")
+            elif kind == EventKind.CHURN:
+                do_churn(payload)
+                rebalance("churn")
+            elif kind == EventKind.OUTAGE_START:
+                w = payload
+                scen_tele["n_outages"] += 1
+                self._outage_now.add(w.ap)
+                # rebalance first — devices it moves off the dying AP
+                # lose their streams via the handoff path; stragglers
+                # left behind lose theirs here
+                rebalance("outage")
+                for st in list(active.values()):
+                    if self._ap_of(st.spec.device) == w.ap:
+                        abort_stream(st)
+            elif kind == EventKind.OUTAGE_END:
+                self._outage_now.discard(payload.ap)
+                rebalance("outage_end")
         wall_s = time.perf_counter() - t_wall0
         n_events = events.n_popped + n_link_events
         SIM_STATS.record(n_events, wall_s)
@@ -1668,6 +2002,12 @@ class ServingCluster:
                 "prefix_lookups": sum(t["n_lookups"] for t in prefix_tele),
                 "prefix_hits": sum(t["n_hits"] for t in prefix_tele),
             }
+        scen_summary = None
+        if scen is not None:
+            if self.rebalancer is not None:
+                scen_tele["n_lp_solves"] = self.rebalancer.n_solves
+                scen_tele["n_lp_warm_hits"] = self.rebalancer.n_warm_hits
+            scen_summary = dict(scen_tele)
         # clear the whole telemetry surface so a reused cluster never
         # exposes one run's end-state to the next run's policy_fn
         self._link_server = None
@@ -1677,7 +2017,11 @@ class ServingCluster:
         self._memory = {}
         self._kvstore = None
         self._prefix = {}
+        self._ap_now = None
+        self._outage_now = set()
+        self._policy_hints = {}
         return FleetReport(records=sorted(records, key=lambda r: r.rid),
                            makespan_s=makespan, n_arrived=len(specs),
                            shed=sorted(shed, key=lambda s: s.rid),
-                           memory=mem_summary, reuse=reuse_summary)
+                           memory=mem_summary, reuse=reuse_summary,
+                           scenario=scen_summary)

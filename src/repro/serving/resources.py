@@ -265,6 +265,13 @@ class LinkTopology:
         """Flow key -> remaining bytes, materialized from the array."""
         return {k: float(self._rem_a[self._row[k]]) for k in self._keys}
 
+    def remaining(self, key) -> Optional[float]:
+        """Bytes still undelivered for an active flow as of the last
+        ``advance``; ``None`` when the key has no in-flight transfer
+        (mobility drivers use this to size the loss when aborting)."""
+        row = self._row.get(key)
+        return None if row is None else float(self._rem_a[row])
+
     @property
     def _path(self) -> dict:
         """Flow key -> path tuple, materialized from the group registry."""
@@ -533,6 +540,12 @@ class ScalarLinkTopology:
         self._stage_share_time: dict = {}    # key -> {stage: share * dt sum}
         self._nc: Optional[tuple] = None
         self._nc_valid = False
+
+    def remaining(self, key) -> Optional[float]:
+        """Bytes still undelivered for an active flow as of the last
+        ``advance``; ``None`` when the key has no in-flight transfer."""
+        rem = self._rem.get(key)
+        return None if rem is None else float(rem)
 
     # ---- membership ----
     def n_active(self) -> int:
@@ -901,6 +914,23 @@ class DeviceRunQueue:
         """Retire an in-service job; returns newly started jobs."""
         del self._running[key]
         return self._dispatch(t)
+
+    def cancel(self, key, t: float) -> list[tuple]:
+        """Abort a job wherever it is (in service or still queued) —
+        device churn kills work mid-flight. Frees the slot without
+        recording attained service beyond what ``_dispatch`` already
+        charged, and returns the jobs that start as a result (a vacated
+        slot dispatches the queue exactly like a completion). No-op
+        (returns []) when the key is unknown — the job may already have
+        completed at the abort's event time."""
+        if key in self._running:
+            del self._running[key]
+            return self._dispatch(t)
+        for i, job in enumerate(self._queue):
+            if job.key == key:
+                del self._queue[i]
+                break
+        return []
 
 
 # ---------------------------------------------------------------------------

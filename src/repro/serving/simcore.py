@@ -45,6 +45,12 @@ class EventKind(IntEnum):
     RELOAD_STREAM_DONE = 4
     RELOAD_DISK_DONE = 5
     RELOAD_COMPUTE_DONE = 6
+    # hostile-world scenario events (serving/scenarios.py); only pushed
+    # when a ScenarioTrace is armed — static fleets never see them
+    HANDOFF = 7
+    CHURN = 8
+    OUTAGE_START = 9
+    OUTAGE_END = 10
 
 
 class Event(NamedTuple):

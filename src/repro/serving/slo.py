@@ -189,6 +189,13 @@ def predict_ttft(plan, cluster, spec, now: float, *,
     share = pred.predict_share(n_flows + 1) if pred is not None else None
     frac = share if share is not None \
         else cluster.projected_flow_frac(spec.device)
+    # hostile-world scenarios: an AP inside an outage window delivers
+    # only the scenario's floor fraction — admission must see the dead
+    # link, not the profiled mean (1.0 on scenario-less clusters, so the
+    # projection is unchanged there)
+    health_fn = getattr(cluster, "uplink_health", None)
+    if health_fn is not None:
+        frac *= health_fn(spec.device)
     bw_eff = cluster.net.mean_bw * frac
     nic_bw = cluster.nic_mean_bw(spec.device)
     if nic_bw is not None:
@@ -209,6 +216,9 @@ def predict_ttft(plan, cluster, spec, now: float, *,
         hit_frac_fn = getattr(cluster, "projected_hit_frac", None)
         hit_frac = hit_frac_fn(spec.device) if hit_frac_fn is not None \
             else frac
+        if hit_frac_fn is not None and health_fn is not None:
+            # the hit leg still crosses the (possibly dead) AP uplink
+            hit_frac *= health_fn(spec.device)
         bw_hit = cluster.net.mean_bw * hit_frac
         if nic_bw is not None:
             bw_hit = min(bw_hit, nic_bw)

@@ -10,6 +10,11 @@ Produces ``RequestSpec`` lists for ``repro.serving.cluster``:
   - **uniform**: deterministic equal spacing (useful for regression
     tests where arrival jitter is noise).
 
+Any base process can additionally be shaped onto an inhomogeneous rate
+by the ``diurnal_*`` / ``flash_crowds`` knobs — a deterministic
+time-rescaling (no extra randomness) that compresses arrivals where the
+modulated rate exceeds the base rate; disarmed knobs are bit-identical.
+
 Request mixes draw context lengths per dataset profile (rounded to whole
 chunks) and policies from a weighted table, so one trace can interleave
 sparkv / strong_hybrid / local_prefill requests the way a real fleet
@@ -108,6 +113,17 @@ class TrafficProfile:
     session_turns_mix: tuple = ((3, 1.0),)
     think_time_s: float = 8.0
     turn_growth_chunks: int = 1
+    # hostile-world arrival shaping: a deterministic time-rescaling of
+    # the base arrival process to an inhomogeneous rate (no extra rng —
+    # disarmed knobs return the base times object untouched, so traces
+    # stay bit-identical). diurnal_amp in [0, 1) modulates the rate by
+    # 1 + amp*sin(2π t / period + phase); flash_crowds entries
+    # (t_start_s, t_end_s, rate_multiplier) multiply the rate inside
+    # their window (synchronized wakeups / stadium crowds).
+    diurnal_amp: float = 0.0
+    diurnal_period_s: float = 60.0
+    diurnal_phase: float = 0.0
+    flash_crowds: tuple = ()
 
 
 def _arrival_times(profile: TrafficProfile, n: int,
@@ -132,6 +148,44 @@ def _arrival_times(profile: TrafficProfile, n: int,
             times[i] = t
         return times
     raise ValueError(f"unknown arrival process {profile.arrival!r}")
+
+
+def _shape_arrivals(profile: TrafficProfile,
+                    times: np.ndarray) -> np.ndarray:
+    """Warp base arrival times onto an inhomogeneous rate profile.
+
+    Standard time-rescaling: if the base process has arrivals at
+    cumulative unit-time ``u``, the shaped process places them at
+    ``Λ⁻¹(u)`` where ``Λ(t) = ∫₀ᵗ m(s) ds`` and ``m`` is the rate
+    multiplier (diurnal sinusoid × flash-crowd windows). Arrivals
+    compress where ``m > 1`` and stretch where ``m < 1``; the inversion
+    is deterministic, so disarmed knobs return ``times`` unchanged and
+    armed ones consume no randomness."""
+    if (profile.diurnal_amp <= 0.0 and not profile.flash_crowds) \
+            or len(times) == 0:
+        return times
+    assert 0.0 <= profile.diurnal_amp < 1.0, profile.diurnal_amp
+    dt = profile.diurnal_period_s / 256 if profile.diurnal_amp > 0 else 1.0
+    for t0, t1, _ in profile.flash_crowds:
+        assert t1 > t0, (t0, t1)
+        dt = min(dt, (t1 - t0) / 16)
+    dt = max(dt, 1e-4)
+    n = 1024
+    while True:
+        grid = np.arange(n) * dt
+        m = np.ones(n)
+        if profile.diurnal_amp > 0:
+            m += profile.diurnal_amp * np.sin(
+                2 * np.pi * grid / profile.diurnal_period_s
+                + profile.diurnal_phase)
+        for t0, t1, mult in profile.flash_crowds:
+            m[(grid >= t0) & (grid < t1)] *= mult
+        lam = np.concatenate([[0.0],
+                              np.cumsum((m[:-1] + m[1:]) * dt / 2)])
+        if lam[-1] >= times[-1] or n >= 1 << 24:
+            break
+        n *= 2
+    return np.interp(times, lam, grid)
 
 
 def _weighted(table: tuple, rng: np.random.Generator) -> str:
@@ -175,7 +229,8 @@ def generate_trace(profile: TrafficProfile, n_requests: int,
                    ) -> list[RequestSpec]:
     """Draw `n_requests` specs: arrival times + per-request mix."""
     rng = rng or np.random.default_rng(seed)
-    arrivals = _arrival_times(profile, n_requests, rng)
+    arrivals = _shape_arrivals(profile,
+                               _arrival_times(profile, n_requests, rng))
     wfq_weights = [w for w, _ in profile.weight_mix]
     wfq_p = np.array([v for _, v in profile.weight_mix], float)
     wfq_p /= wfq_p.sum()

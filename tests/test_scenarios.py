@@ -1,0 +1,360 @@
+"""Hostile-world scenario layer (`serving/scenarios` + cluster wiring).
+
+Covers the four contracts the hostile machinery must honour:
+
+  - **bit-parity when disarmed**: an empty ``ScenarioTrace`` (and an
+    idle ``FleetRebalancer``) must leave fleet reports bit-identical to
+    ``scenario=None`` on BOTH link cores, and armed fleets must agree
+    bitwise across cores too (losses and all);
+  - **loss/resume conservation**: the engine's ``StreamLost`` leg rolls
+    back exactly the optimistic accounting of the aborted attempt —
+    checked chunk-by-chunk over randomized loss injections (hypothesis,
+    vendored-stub compatible);
+  - **boundary semantics**: a handoff landing during the final chunk
+    still serves the request (re-streamed or flipped to compute), a
+    same-AP handoff is a counted no-op with untouched results, and an
+    outage opening exactly at the stream-complete boundary loses zero
+    bytes;
+  - **rebalancer mechanics**: the FleetLP relaxation solves, moves
+    devices off a collapsed AP, and re-solves warm from the previous
+    basis.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SparKVConfig, get_config
+from repro.core import baselines as B
+from repro.core.costs import NETWORKS, RunQueueModel
+from repro.core.engine import (ComputeStart, StartAck, StoreHit, StreamLost,
+                               StreamStart, Wait)
+from repro.data.workloads import DATASETS, synthesize
+from repro.serving.cluster import ServingCluster
+from repro.serving.scenarios import (ChurnEvent, FleetRebalancer, FleetState,
+                                     HandoffEvent, OutageWindow,
+                                     ScenarioTrace, apply_outages,
+                                     handoff_storm, markov_bw_trace)
+from repro.serving.slo import SLOPolicy
+from repro.serving.traffic import poisson_trace
+
+CFG = get_config("sparkv-qwen3-4b")
+SP = SparKVConfig(scheduler_mode="engine")
+NET = NETWORKS["campus-wifi"]
+
+
+def _fleet_fingerprint(report):
+    """Every per-request observable the scenario layer could perturb,
+    exactly as produced (no rounding) — mirrors test_simcore's oracle."""
+    return [(r.spec.arrival_s, r.ttft_s, r.ttlt_s, r.energy_j,
+             r.uplink_share, r.compute_wait_s, r.bytes_streamed, r.policy,
+             tuple(sorted(r.stage_shares.items())))
+            for r in report.records]
+
+
+def _cluster(*, n_devices=2, n_aps=2, scenario=None, rebalancer=None,
+             core="vectorized", max_context=2048):
+    del max_context
+    return ServingCluster(CFG, SP, "jetson-orin", "campus-wifi",
+                          n_devices=n_devices, n_aps=n_aps,
+                          run_queue=RunQueueModel(2, "wfq"),
+                          max_concurrency=8, slo=SLOPolicy(),
+                          link_core=core, scenario=scenario,
+                          rebalancer=rebalancer)
+
+
+# ---------------------------------------------------------------------------
+# disarmed parity + armed cross-core parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("core", ["vectorized", "scalar"])
+def test_disarmed_scenario_is_bit_identical(core):
+    """An empty ScenarioTrace + idle rebalancer must push zero events,
+    consume no extra randomness, and reproduce the scenario-free fleet
+    report bit-for-bit — the hostile machinery is free when unused."""
+    specs = poisson_trace(10, 2.0, max_context=2048, seed=5)
+    plain = _cluster(core=core).run(specs)
+    disarmed = _cluster(core=core, scenario=ScenarioTrace(),
+                        rebalancer=FleetRebalancer()).run(specs)
+    assert _fleet_fingerprint(plain) == _fleet_fingerprint(disarmed)
+    assert disarmed.scenario is None
+    assert plain.summary() == disarmed.summary()
+
+
+def test_hostile_fleet_parity_across_cores():
+    """Armed scenario (handoffs mid-stream + an outage): the vectorized
+    and scalar link cores must agree bitwise on every record AND on the
+    loss telemetry — aborts hit both cores at identical instants."""
+    specs = poisson_trace(8, 2.0, max_context=16384, seed=7)
+    scen = ScenarioTrace(
+        handoffs=handoff_storm(2, 2, t_start_s=0.4, spacing_s=0.2),
+        outages=(OutageWindow(ap=1, t_start_s=2.0, t_end_s=4.0),))
+    reports = {core: _cluster(core=core, scenario=scen).run(specs)
+               for core in ("vectorized", "scalar")}
+    assert _fleet_fingerprint(reports["vectorized"]) == \
+        _fleet_fingerprint(reports["scalar"])
+    assert reports["vectorized"].scenario == reports["scalar"].scenario
+    assert reports["vectorized"].scenario["n_handoffs"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# boundary semantics on a single request
+# ---------------------------------------------------------------------------
+
+def _single_spec(max_context=16384):
+    return poisson_trace(1, 1.0, max_context=max_context, seed=3)
+
+
+def test_handoff_during_final_chunk_still_serves():
+    """Handoffs swept across the tail of the stream window (including
+    the final chunk's transfer) must always deliver the full context:
+    the lost chunk re-enters the backlog and is re-streamed on the new
+    path or flipped to compute — never dropped. At least one sweep
+    point must land mid-transfer and register a loss."""
+    specs = _single_spec()
+    r0 = _cluster().run(specs).records[0]
+    window = r0.context_done_s - r0.admit_s
+    any_loss = False
+    for frac in (0.55, 0.7, 0.85, 0.97):
+        t_h = r0.admit_s + frac * window
+        scen = ScenarioTrace(handoffs=(
+            HandoffEvent(t_s=t_h, device=0, new_ap=1),))
+        rep = _cluster(scenario=scen).run(specs)
+        assert rep.summary()["n_done"] == 1
+        rec = rep.records[0]
+        # full context assembled: a loss re-streams (possibly on the new
+        # AP's independent — maybe faster — trace) or flips to compute;
+        # it never drops a chunk
+        assert rec.n_streamed + rec.n_computed == \
+            r0.n_streamed + r0.n_computed
+        assert rec.ttft_s > 0 and rec.bytes_streamed >= 0
+        scen_tele = rep.scenario
+        assert scen_tele["n_handoffs"] == 1
+        if scen_tele["n_streams_lost"]:
+            any_loss = True
+            assert scen_tele["bytes_lost"] > 0
+    assert any_loss, "no sweep point aborted an in-flight transfer"
+
+
+def test_same_ap_handoff_is_counted_noop():
+    """A handoff onto the AP the device already holds must not touch
+    any flow: results stay bit-identical to the scenario-free run and
+    the no-op lands in telemetry."""
+    specs = _single_spec(max_context=8192)
+    plain = _cluster().run(specs)
+    # device 0's static AP is 0 (round-robin d % n_aps)
+    scen = ScenarioTrace(handoffs=(
+        HandoffEvent(t_s=0.2, device=0, new_ap=0),))
+    rep = _cluster(scenario=scen).run(specs)
+    assert _fleet_fingerprint(rep) == _fleet_fingerprint(plain)
+    assert rep.scenario["n_handoffs"] == 0        # no actual move
+    assert rep.scenario["n_handoff_noop"] == 1
+    assert rep.scenario["n_streams_lost"] == 0
+
+
+def test_outage_at_stream_complete_boundary_loses_nothing():
+    """An outage window opening exactly at the chunk boundary where the
+    last transfer completed finds nothing in flight: zero aborts, zero
+    bytes lost, and the records stay bit-identical (every transfer
+    integrated over the pre-window trace)."""
+    specs = _single_spec(max_context=8192)
+    cl0 = _cluster()
+    plain = cl0.run(specs)
+    r0 = plain.records[0]
+    # first dt-grid point at/after stream completion: a boundary, not
+    # mid-transfer (context_done_s includes the final dequant tail)
+    dt = cl0.bw_dt
+    t0 = (np.floor(r0.context_done_s / dt) + 1) * dt
+    scen = ScenarioTrace(outages=(
+        OutageWindow(ap=0, t_start_s=float(t0), t_end_s=float(t0) + 5.0),))
+    rep = _cluster(scenario=scen).run(specs)
+    assert _fleet_fingerprint(rep) == _fleet_fingerprint(plain)
+    assert rep.scenario["n_outages"] == 1
+    assert rep.scenario["n_streams_lost"] == 0
+    assert rep.scenario["bytes_lost"] == 0.0
+
+
+def test_churn_replaces_prefilling_request():
+    """A device failing mid-prefill re-admits its request on a live
+    device under a fresh rid with the ORIGINAL arrival time (TTFT keeps
+    the lost work); nothing is silently dropped."""
+    specs = _single_spec()
+    r0 = _cluster().run(specs).records[0]
+    t_mid = r0.admit_s + 0.4 * (r0.context_done_s - r0.admit_s)
+    scen = ScenarioTrace(churn=(ChurnEvent(t_s=t_mid, device=0),))
+    rep = _cluster(scenario=scen).run(specs)
+    assert rep.scenario["n_churned"] == 1
+    s = rep.summary()
+    assert s["n_done"] + s["n_shed"] >= 1
+    if s["n_done"]:
+        rec = rep.records[0]
+        assert rec.spec.device != 0           # re-placed off the dead box
+        assert rec.spec.arrival_s == specs[0].arrival_s
+        assert rec.ttft_s > r0.ttft_s         # lost work is paid for
+
+
+# ---------------------------------------------------------------------------
+# engine loss/resume byte conservation (hypothesis)
+# ---------------------------------------------------------------------------
+
+_WL = synthesize(CFG, 4096, DATASETS["triviaqa"])
+_PLAN = B.plan_policy("sparkv", CFG, _WL, "jetson-orin", NET, SP)
+
+
+def _drive_with_losses(loss_attempts, bw=25e6):
+    """Drive one engine session with a fixed-rate synchronous driver,
+    aborting the stream attempts numbered in ``loss_attempts`` (attempt
+    index -> delivered fraction) mid-transfer. Returns (EngineResult,
+    expected_bytes_lost, n_injected)."""
+    plan = _PLAN
+    from repro.core.costs import GroundTruthLatency, PROFILES
+    from repro.core.engine import BandwidthIntegrator, Completion, HybridEngine
+    profile = PROFILES["jetson-orin"]
+    eng = HybridEngine(
+        grid=plan.grid, chunk_bytes=plan.bytes_map,
+        active_blocks=plan.active_map,
+        t_comp_pred={c: plan.planner.tc[i]
+                     for i, c in enumerate(plan.grid.chunks())},
+        gt=GroundTruthLatency(profile, CFG.resolved_head_dim
+                              if CFG.num_heads else 64),
+        profile=profile,
+        bw=BandwidthIntegrator(np.full(4000, bw), 0.01),
+        cfg_model=CFG, controller=plan.controller, seed=0)
+    gen = eng.session(plan.schedule, context_len=_WL.context_len)
+    now = 0.0
+    attempt = 0
+    pend_s = None                    # (t_end, chunk, nbytes, t_begin, idx)
+    pend_c = None                    # (t_end, chunk, t_begin)
+    expected_lost = 0.0
+    n_injected = 0
+    ev = next(gen)
+    try:
+        while True:
+            if isinstance(ev, (StreamStart, StoreHit)):
+                dur = ev.nbytes / bw + ev.t_proc
+                pend_s = (now + dur, ev.chunk, ev.nbytes, now, attempt)
+                attempt += 1
+                ev = gen.send(None)
+            elif isinstance(ev, ComputeStart):
+                pend_c = (now + ev.duration_s, ev.chunk, now)
+                ev = gen.send(StartAck(t_start=now))
+            else:
+                assert isinstance(ev, Wait)
+                if pend_s is not None and pend_s[4] in loss_attempts:
+                    frac = loss_attempts.pop(pend_s[4])
+                    t_end, c, nbytes, t_b, _ = pend_s
+                    t_abort = t_b + frac * (t_end - t_b)
+                    delivered = frac * nbytes
+                    expected_lost += delivered
+                    n_injected += 1
+                    pend_s = None
+                    now = max(now, t_abort)
+                    ev = gen.send(StreamLost(c, t_abort, delivered))
+                    continue
+                assert pend_s is not None or pend_c is not None, \
+                    "engine waited with nothing in flight"
+                take_stream = pend_c is None or (
+                    pend_s is not None and pend_s[0] <= pend_c[0])
+                if take_stream:
+                    t_end, c, _, t_b, _ = pend_s
+                    pend_s = None
+                    path = "stream"
+                else:
+                    t_end, c, t_b = pend_c
+                    pend_c = None
+                    path = "compute"
+                now = max(now, t_end)
+                ev = gen.send(Completion(path=path, chunk=c,
+                                         t_start=t_b, t_end=t_end))
+    except StopIteration as stop:
+        return stop.value, expected_lost, n_injected
+
+
+# up to 4 losses per run: (attempt index, delivered fraction)
+_LOSS = st.tuples(st.integers(0, 30), st.floats(0.05, 0.95))
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(st.lists(_LOSS, min_size=0, max_size=4))
+def test_stream_loss_conserves_bytes(losses):
+    """For ANY injection of mid-transfer losses: every chunk still ends
+    exactly once in streamed or computed, ``bytes_streamed`` equals the
+    bytes of the chunks that actually arrived (each loss rolled back
+    exactly), ``bytes_lost`` sums the wasted deliveries, and the loss
+    count matches the injections."""
+    loss_map = {}
+    for idx, frac in losses:
+        loss_map.setdefault(idx, frac)
+    res, expected_lost, n_injected = _drive_with_losses(dict(loss_map))
+    allc = set(_PLAN.grid.chunks())
+    assert res.streamed_set | res.computed_set == allc
+    assert not (res.streamed_set & res.computed_set)
+    assert np.isclose(
+        res.bytes_streamed,
+        sum(_PLAN.bytes_map[c] for c in res.streamed_set), rtol=1e-12)
+    assert res.n_lost == n_injected
+    assert np.isclose(res.bytes_lost, expected_lost, rtol=1e-12, atol=0.0)
+    if n_injected == 0:
+        assert res.bytes_lost == 0.0 and res.bytes_restreamed == 0.0
+    # re-issued bytes only ever cover previously-attempted chunks
+    assert res.bytes_restreamed <= res.bytes_streamed + res.bytes_lost
+
+
+# ---------------------------------------------------------------------------
+# trace generators + rebalancer mechanics
+# ---------------------------------------------------------------------------
+
+def test_markov_trace_levels_and_shape():
+    rng = np.random.default_rng(0)
+    tr = markov_bw_trace(40e6, 30.0, 0.01, rng)
+    assert len(tr) == 3000
+    assert set(np.unique(tr / 40e6).round(6)) <= {1.0, 0.4, 0.08}
+    assert len(np.unique(tr)) >= 2               # it actually modulates
+
+
+def test_apply_outages_noop_returns_same_object():
+    tr = np.full(100, 5e6)
+    w = (OutageWindow(ap=1, t_start_s=0.1, t_end_s=0.3),)
+    assert apply_outages(tr, 0.01, w, ap=0) is tr
+    masked = apply_outages(tr, 0.01, w, ap=1)
+    assert masked is not tr
+    assert np.all(masked[10:30] == 5e6 * 0.02)
+    assert np.all(masked[:10] == 5e6) and np.all(masked[30:] == 5e6)
+
+
+def _fleet_state(ap_health, ap_of_device=(0, 0), demand=(8e6, 8e6)):
+    d = len(ap_of_device)
+    a = len(ap_health)
+    return FleetState(
+        now=1.0, demand=np.array(demand, float),
+        ap_of_device=list(ap_of_device),
+        ap_health=np.array(ap_health, float),
+        ap_flows=np.ones(a), mean_bw=5e6,
+        comp_rate=np.full(d, 2e6),
+        reach=[tuple(range(a))] * d)
+
+
+def test_rebalancer_moves_off_collapsed_ap_and_warm_resolves():
+    """Both devices sit on a dying AP 0: the LP must move at least one
+    onto the healthy AP and hint `cachegen` for anyone left starved.
+    The immediate re-solve reuses the previous basis (warm hit)."""
+    rb = FleetRebalancer()
+    dec = rb.decide(_fleet_state(ap_health=(0.02, 1.0)))
+    assert dec is not None
+    assert 1 in dec.placement.values()           # someone escapes AP 0
+    assert dec.makespan_s > 0
+    assert set(dec.policy_hint.values()) <= \
+        {"sparkv", "cachegen", "local_prefill"}
+    dec2 = rb.decide(_fleet_state(ap_health=(0.02, 1.0),
+                                  demand=(9e6, 7e6)))
+    assert dec2 is not None and rb.n_warm_hits >= 1
+    assert rb.n_solves == 2
+
+
+def test_rebalancer_idle_cases():
+    rb = FleetRebalancer(min_interval_s=10.0)
+    st0 = _fleet_state(ap_health=(1.0, 1.0))
+    assert rb.decide(st0) is not None            # first solve passes
+    assert rb.decide(st0) is None                # throttled
+    rb2 = FleetRebalancer()
+    assert rb2.decide(_fleet_state(ap_health=(1.0, 1.0),
+                                   demand=(0.0, 0.0))) is None

@@ -1,0 +1,205 @@
+#!/usr/bin/env python3
+"""Perf regression gate for quick-run benchmarks (stdlib only).
+
+Compares a quick-run benchmark JSON (``results/benchmarks/quick/``)
+against tolerance bands derived from the matching checked-in full-run
+JSON (``results/benchmarks/``). Quick runs shrink the workload and CI
+machines vary, so the bands are *scale-free where possible* (boolean
+acceptance flags, relational metrics) and deliberately wide where a
+machine-dependent throughput is all we have — the gate exists to catch
+order-of-magnitude regressions (an accidentally quadratic event loop, a
+dead reuse layer, a rebalancer that stopped beating static placement),
+not single-digit-percent noise.
+
+  python tools/bench_gate.py simcore decode reuse hostile
+  python tools/bench_gate.py --list
+
+Check kinds (see GATES):
+  bool   — the quick run's acceptance flag at `path` must be true
+  ratio  — quick[path] / full[ref or path] must lie in [min, max]
+  lt     — quick[path] must be strictly below quick[other]
+  gt     — quick[path] must exceed `floor` (default 0)
+
+Exits non-zero listing every violated band. A missing quick JSON is an
+error (the smoke step did not run); a missing *full* JSON skips ratio
+checks with a warning (new benches land their full run in the same PR,
+but the gate must not force ordering within it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+FULL_DIR = REPO / "results" / "benchmarks"
+QUICK_DIR = FULL_DIR / "quick"
+
+# bench name -> saved JSON stem (benchmarks.common.save slug)
+STEM = {
+    "simcore": "simcore",
+    "decode": "decode_goodput",
+    "reuse": "reuse",
+    "hostile": "hostile",
+}
+
+GATES: dict[str, list[dict]] = {
+    "simcore": [
+        # the vectorized core must still beat the scalar reference 10x
+        # even at quick scale
+        {"kind": "bool", "path": "acceptance/meets_10x"},
+        # machine-dependent events/s: only an order-of-magnitude
+        # collapse (e.g. the event queue going quadratic) trips this
+        {
+            "kind": "ratio",
+            "path": "_profile/sim_events_per_s",
+            "min": 0.02,
+            "max": 100.0,
+        },
+    ],
+    "decode": [
+        {"kind": "bool", "path": "acceptance/compute-bound/continuous_wins"},
+        {"kind": "bool", "path": "acceptance/stream-bound/continuous_wins"},
+        # simulated (machine-independent) goodput, workload-scaled:
+        # quick runs land within a few x of the full run
+        {
+            "kind": "ratio",
+            "path": "acceptance/compute-bound/continuous_tok_s",
+            "min": 0.25,
+            "max": 4.0,
+        },
+        {
+            "kind": "ratio",
+            "path": "acceptance/stream-bound/continuous_tok_s",
+            "min": 0.25,
+            "max": 4.0,
+        },
+    ],
+    "reuse": [
+        {"kind": "bool", "path": "acceptance/zero_overlap_parity"},
+        # the store must still see hits and still cut egress at quick
+        # scale (goodput may not separate on tiny request counts)
+        {"kind": "gt", "path": "acceptance/store_hit_rate", "floor": 0.0},
+        {
+            "kind": "lt",
+            "path": "acceptance/store_egress_gb",
+            "other": "acceptance/no_reuse_egress_gb",
+        },
+    ],
+    "hostile": [
+        {"kind": "bool", "path": "acceptance/calm_parity_vectorized"},
+        {"kind": "bool", "path": "acceptance/calm_parity_scalar"},
+        {"kind": "bool", "path": "acceptance/rebalancer_beats_static"},
+        {"kind": "bool", "path": "acceptance/rebalancer_no_worse_hostile"},
+    ],
+}
+
+
+def _lookup(doc: dict, path: str):
+    node = doc
+    for key in path.split("/"):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def check_bench(name: str) -> list[str]:
+    """Returns human-readable violation messages for one bench."""
+    stem = STEM.get(name, name)
+    quick_path = QUICK_DIR / f"{stem}.json"
+    if not quick_path.exists():
+        return [f"{name}: quick result missing ({quick_path})"]
+    quick = json.loads(quick_path.read_text())
+    full_path = FULL_DIR / f"{stem}.json"
+    full = json.loads(full_path.read_text()) if full_path.exists() else None
+
+    errs = []
+    for spec in GATES[name]:
+        path = spec["path"]
+        got = _lookup(quick, path)
+        kind = spec["kind"]
+        if kind == "bool":
+            if got is not True:
+                errs.append(f"{name}: {path} is {got!r}, expected true")
+        elif kind == "gt":
+            floor = spec.get("floor", 0.0)
+            if not (isinstance(got, (int, float)) and got > floor):
+                errs.append(f"{name}: {path} = {got!r}, expected > {floor}")
+        elif kind == "lt":
+            other = _lookup(quick, spec["other"])
+            ok = (
+                isinstance(got, (int, float))
+                and isinstance(other, (int, float))
+                and got < other
+            )
+            if not ok:
+                errs.append(
+                    f"{name}: expected {path} ({got!r}) < "
+                    f"{spec['other']} ({other!r})"
+                )
+        elif kind == "ratio":
+            if full is None:
+                print(
+                    f"  [warn] {name}: no full-run JSON at {full_path}; "
+                    f"skipping ratio band on {path}"
+                )
+                continue
+            ref = _lookup(full, spec.get("ref", path))
+            if not isinstance(got, (int, float)) or not isinstance(
+                ref, (int, float)
+            ):
+                errs.append(
+                    f"{name}: {path} unavailable (quick={got!r}, "
+                    f"full={ref!r})"
+                )
+                continue
+            if ref <= 0:
+                errs.append(f"{name}: full-run {path} = {ref!r}, not > 0")
+                continue
+            ratio = got / ref
+            if not (spec["min"] <= ratio <= spec["max"]):
+                errs.append(
+                    f"{name}: {path} quick/full ratio {ratio:.3g} "
+                    f"outside [{spec['min']}, {spec['max']}] "
+                    f"(quick={got:.6g}, full={ref:.6g})"
+                )
+        else:  # pragma: no cover - spec typo guard
+            errs.append(f"{name}: unknown check kind {kind!r}")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="*", help="gated bench names")
+    ap.add_argument(
+        "--list", action="store_true", help="print gated bench names"
+    )
+    args = ap.parse_args()
+    if args.list:
+        print("\n".join(sorted(GATES)))
+        return 0
+    names = args.benches or sorted(GATES)
+    failures = []
+    for name in names:
+        if name not in GATES:
+            # ungated benches pass through: every smoke step can call
+            # the gate unconditionally
+            print(f"  [gate] {name}: no bands registered, skipping")
+            continue
+        errs = check_bench(name)
+        if errs:
+            failures.extend(errs)
+        else:
+            print(f"  [gate] {name}: OK ({len(GATES[name])} bands)")
+    if failures:
+        print("\nbench gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
